@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: CSV emission + the simulated-cluster loop."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.cutoff import order_stats
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_cutoff_loop(controller, timer, n_steps: int) -> Dict[str, float]:
+    """Run a controller against a runtime source; return throughput stats."""
+    total_t = 0.0
+    total_g = 0
+    oracle_t = 0.0
+    per_iter = []
+    for _ in range(n_steps):
+        times = timer.step()
+        c = int(controller.predict_cutoff())
+        it = order_stats.iter_time(times, c)
+        controller.observe(times, times <= it + 1e-12)
+        total_t += it
+        total_g += c
+        oracle_t += order_stats.iter_time(
+            times, order_stats.oracle_cutoff(times))
+        per_iter.append(it)
+    return {"throughput": total_g / total_t, "wall": total_t,
+            "oracle_wall": oracle_t, "mean_iter": float(np.mean(per_iter))}

@@ -1,0 +1,4 @@
+"""Re-export: canonical implementation lives in repro.perf.hlo_stats."""
+from repro.perf.hlo_stats import *  # noqa: F401,F403
+from repro.perf.hlo_stats import (collective_bytes, roofline_terms,
+                                  PEAK_FLOPS_BF16, HBM_BW, ICI_BW)

@@ -1,0 +1,104 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and reports, per (arch x shape x mesh):
+compute/memory/collective terms in seconds, the dominant bound,
+MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), and the useful-FLOPs
+ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs.base import SHAPES, get_config
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N(_active) * tokens, the global useful-FLOPs yardstick.
+
+    train: 6ND (fwd+bwd).  prefill: 2ND.  decode: 2ND per generated token.
+    """
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_cells(mesh_filter=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def table(mesh="single_pod_16x16"):
+    rows = []
+    for rec in load_cells(mesh):
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec.get("error", "?")})
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        rl = rec["roofline"]
+        mf = model_flops(cfg, shape)
+        hlo_global = rec["flops_per_device"] * rec["n_devices"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "bound": rl["bound"],
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "roofline_frac": (rl["compute_s"]
+                              / max(rl["step_s_lower_bound"], 1e-12)),
+            "mem_gb": rec["memory"]["peak_live_est"] / 2**30,
+            "grad_accum": rec.get("grad_accum", 1),
+        })
+    return rows
+
+
+def bench_roofline():
+    for r in table():
+        if "error" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"ERROR {r['error'][:60]}")
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"bound={r['bound']} compute={r['compute_s']:.4f}s "
+             f"memory={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+             f"useful={r['useful_ratio']:.2f} "
+             f"frac={r['roofline_frac']:.3f} mem={r['mem_gb']:.1f}GB")
+
+
+def markdown_table(mesh="single_pod_16x16"):
+    lines = ["| arch | shape | compute s | memory s | coll s | bound | "
+             "MODEL/HLO | roofline frac | mem GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in table(mesh):
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"ERROR | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['bound']} |"
+            f" {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['mem_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,33 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the 2175-worker Cray model + shrink fig4")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, paper_figures, roofline
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    paper_figures.bench_elfving_table()
+    paper_figures.bench_fig2_throughput()
+    paper_figures.bench_fig3_prediction(cray=not args.quick)
+    paper_figures.bench_fig4_convergence(
+        steps=60 if args.quick else 150)
+    paper_figures.bench_censoring_ablation()
+    kernels_bench.bench_kernels()
+    roofline.bench_roofline()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Fault-tolerance walkthrough: crash/restart + permanent node failure +
+elastic resize.
+
+1. Train 30 steps with async checkpointing.
+2. Simulate a crash; restart from the latest checkpoint (exact resume —
+   the controller window and data cursor come back too).
+3. Kill one worker permanently: the cutoff controller routes around it
+   within one step (the paper's mechanism doubling as fault tolerance).
+4. Elastic resize 8 -> 6 workers: the same checkpoint restores onto the
+   smaller cluster (arrays are saved mesh-agnostically), the Elfving
+   fallback covers cutoffs until the DMM is refit for the new shape.
+
+  PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.cluster.simulator import ClusterSim
+from repro.configs.base import get_config
+from repro.core.controller import ElfvingController
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.train import Trainer, make_train_step
+from repro.models import model as M
+
+CKPT = "/tmp/repro_ft_demo"
+
+
+class FailingCluster(ClusterSim):
+    """Worker `dead` becomes a permanent straggler after step `at`."""
+
+    def __init__(self, dead: int, at: int, **kw):
+        super().__init__(**kw)
+        self.dead, self.at = dead, at
+
+    def step(self):
+        t = super().step()
+        if self.t >= self.at:
+            t[self.dead] = 1e6  # never finishes
+        return t
+
+
+def make_trainer(cfg, n_workers, timer):
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
+                           global_batch=24, seed=0)
+    opt = optim.adamw(3e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    tr = Trainer(cfg=cfg, step_fn=step, data=data,
+                 controller=ElfvingController(n_workers, warmup=3),
+                 timer=timer, n_workers=n_workers, ckpt_dir=CKPT,
+                 ckpt_every=10)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    return tr.restore_or_init(init_fn)
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_config("qwen2-0.5b").reduced()
+
+    print("=== phase 1: train 30 steps with checkpoints ===")
+    tr = make_trainer(cfg, 8, ClusterSim(n_workers=8, n_nodes=2, seed=1))
+    tr.run(30, verbose=True)
+    loss_before = tr.history[-1]["loss"]
+
+    print("\n=== phase 2: simulated crash; restart from checkpoint ===")
+    tr2 = make_trainer(cfg, 8, ClusterSim(n_workers=8, n_nodes=2, seed=1))
+    print(f"resumed at step {tr2.step} (clock {tr2.sim_clock:.1f}s)")
+    assert tr2.step == 30
+    tr2.run(10, verbose=True)
+    assert tr2.history[-1]["loss"] < loss_before * 1.5
+
+    print("\n=== phase 3: permanent worker failure at step 45 ===")
+    tr3 = make_trainer(cfg, 8, FailingCluster(
+        dead=3, at=5, n_workers=8, n_nodes=2, seed=1))
+    tr3.run(15, verbose=True)
+    cs = [h["c"] for h in tr3.history[-8:]]
+    print(f"cutoffs after failure: {cs} (controller routes around the "
+          f"dead worker; iteration time stays bounded)")
+    assert max(h["iter_time"] for h in tr3.history[-5:]) < 100
+
+    print("\n=== phase 4: elastic resize 8 -> 6 workers ===")
+    tr4 = make_trainer(cfg, 6, ClusterSim(n_workers=6, n_nodes=2, seed=2))
+    print(f"restored step {tr4.step} onto 6 workers "
+          f"(mesh-agnostic checkpoint)")
+    tr4.run(10, verbose=True)
+    print("\nall phases OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+import jax, jax.numpy as jnp
+import sys
+
+from repro.configs.base import get_config, all_archs
+from repro.models import model as M
+
+ARCHS = sys.argv[1:] or list(all_archs())
+
+for name in ARCHS:
+    cfg = get_config(name).reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_model(cfg, key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    B, S = 2, 32
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jnp.zeros((B, S, cfg.d_model))
+        batch["image_mask"] = jnp.zeros((B, S), bool)
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq_len, cfg.d_model)) * 0.01
+
+    loss, metrics = M.train_loss(cfg, params, batch)
+    g = jax.grad(lambda p: M.train_loss(cfg, p, batch)[0])(params)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g)))
+    print(f"{name:24s} params={n:9d} loss={float(loss):8.4f} gnorm={float(gn):10.4f} "
+          f"finite={bool(jnp.isfinite(loss))}")

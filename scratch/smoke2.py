@@ -1,0 +1,52 @@
+"""Prefill+decode must reproduce full-forward logits (cache correctness)."""
+import jax, jax.numpy as jnp
+import numpy as np
+import sys
+
+from repro.configs.base import get_config, all_archs
+from repro.models import model as M
+
+ARCHS = sys.argv[1:] or list(all_archs())
+
+for name in ARCHS:
+    cfg = get_config(name).reduced()
+    import dataclasses
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(1)
+    params = M.init_model(cfg, key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    batch = {"tokens": toks, "positions": pos}
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jnp.zeros((B, S, cfg.d_model))
+        batch["image_mask"] = jnp.zeros((B, S), bool)
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq_len, cfg.d_model)) * 0.01
+
+    # full forward logits
+    full_logits, _, _ = M.forward(cfg, params, batch, mode="train")
+
+    # prefill S-2 tokens, then decode tokens S-2 and S-1
+    pre = {k: (v[..., :S-2] if v.ndim == 2 else (v[:, :, :S-2] if v.ndim == 3 and k == "positions" else v))
+           for k, v in batch.items()}
+    pre["tokens"] = toks[:, :S-2]
+    if batch["positions"].ndim == 3:
+        pre["positions"] = batch["positions"][:, :, :S-2]
+    else:
+        pre["positions"] = pos[:, :S-2]
+    if "patch_embeds" in batch:
+        pre["patch_embeds"] = batch["patch_embeds"][:, :S-2]
+        pre["image_mask"] = batch["image_mask"][:, :S-2]
+    last, caches = M.prefill(cfg, params, pre)
+    caches = M.pad_caches(caches, S)
+    err0 = float(jnp.max(jnp.abs(last - full_logits[:, S-3])))
+
+    lg1, caches = M.decode_step(cfg, params, toks[:, S-2:S-1], jnp.int32(S-2), caches)
+    lg2, caches = M.decode_step(cfg, params, toks[:, S-1:S], jnp.int32(S-1), caches)
+    err1 = float(jnp.max(jnp.abs(lg1[:, 0] - full_logits[:, S-2])))
+    err2 = float(jnp.max(jnp.abs(lg2[:, 0] - full_logits[:, S-1])))
+    ok = max(err0, err1, err2) < 2e-3
+    print(f"{name:24s} prefill_err={err0:.2e} dec1_err={err1:.2e} dec2_err={err2:.2e} {'OK' if ok else 'FAIL'}")

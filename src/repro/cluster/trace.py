@@ -1,0 +1,40 @@
+"""Trace record/replay — the paper's 'instrument the cluster once' step."""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+
+def save_trace(path: str, times: np.ndarray, meta: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, times=np.asarray(times, np.float32),
+                        **{f"meta_{k}": v for k, v in (meta or {}).items()})
+
+
+def load_trace(path: str) -> np.ndarray:
+    with np.load(path) as z:
+        return np.asarray(z["times"], np.float64)
+
+
+class TraceReplay:
+    """Replays a recorded trace with the ClusterSim interface."""
+
+    def __init__(self, times: np.ndarray, loop: bool = True):
+        self.times = np.asarray(times, np.float64)
+        self.loop = loop
+        self.t = 0
+        self.n_workers = self.times.shape[1]
+
+    def step(self) -> np.ndarray:
+        if self.t >= len(self.times):
+            if not self.loop:
+                raise StopIteration
+            self.t = 0
+        out = self.times[self.t]
+        self.t += 1
+        return out
+
+    def run(self, n_steps: int) -> np.ndarray:
+        return np.stack([self.step() for _ in range(n_steps)])

@@ -1,0 +1,58 @@
+"""Masked gradient aggregation — the cutoff update on an SPMD mesh.
+
+The paper's production variant (§4.3): the parameter server broadcasts the
+participant list as a bit array; dropped workers zero their gradients; the
+ring all-reduce runs over the full array; the update divides by c.
+
+Two equivalent implementations:
+
+1. ``example_weights`` — production path: per-example weights w (1 for
+   examples on included DP shards, 0 otherwise) folded into the loss,
+   ``loss = sum(w*ce)/sum(w)``.  The gradient all-reduce GSPMD already emits
+   then implements Alg. 1 line 29 exactly, with zero extra collectives.
+2. ``masked_psum_mean`` — explicit shard_map bit-array + psum, used by tests
+   to prove (1) is equivalent and as the reference semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def example_weights(mask: np.ndarray, global_batch: int) -> np.ndarray:
+    """Expand a per-worker bit array to per-example weights.
+
+    mask: (n_workers,) 0/1 — worker j owns the j-th contiguous slice of the
+    global batch (matching the DP sharding of the batch dimension).
+    """
+    mask = np.asarray(mask, np.float32)
+    n = mask.shape[0]
+    assert global_batch % n == 0, (global_batch, n)
+    return np.repeat(mask, global_batch // n)
+
+
+def masked_psum_mean(grads, mask_bit, mesh, dp_axes):
+    """Reference bit-array aggregation: g = psum(bit * g_local) / psum(bit).
+
+    grads: pytree of LOCAL per-shard gradients (already averaged within the
+    shard); mask_bit: (dp_size,) float, one entry per DP shard.
+    """
+    axes = tuple(dp_axes)
+
+    def body(bit, *leaves):
+        c = jax.lax.psum(bit, axes)
+        outs = [jax.lax.psum(l * bit, axes) / jnp.maximum(c, 1.0)
+                for l in leaves]
+        return tuple(outs)
+
+    flat, tree = jax.tree.flatten(grads)
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes),) + tuple(P(*([None] * l.ndim)) for l in flat),
+        out_specs=tuple(P(*([None] * l.ndim)) for l in flat),
+    )(mask_bit, *flat)
+    return jax.tree.unflatten(tree, list(out))

@@ -1,0 +1,149 @@
+"""Cutoff controllers — the parameter-server decision logic (paper Alg. 1).
+
+Each controller implements::
+
+    c = ctl.predict_cutoff()            # before the step (line 23)
+    ctl.observe(times, finished_mask)   # after the step (lines 25-26)
+
+where ``times`` are per-worker runtimes for the finished workers (entries for
+dropped workers are ignored) and ``finished_mask`` marks who reported.
+
+Controllers:
+  * CutoffController  — the paper's method: DMM + amortized inference,
+    MC order statistics, censored imputation.
+  * ElfvingController — the analytic iid-normal "order" baseline (Eq. 3).
+  * StaticCutoffController — Chen et al. (2016) fixed cutoff.
+  * FullSyncController — waits for everyone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cutoff import censoring, elfving, order_stats
+from repro.core.runtime_model.api import RuntimeModel
+
+
+class FullSyncController:
+    def __init__(self, n_workers: int):
+        self.n = n_workers
+
+    def predict_cutoff(self) -> int:
+        return self.n
+
+    def observe(self, times, finished_mask=None):
+        pass
+
+
+class StaticCutoffController(FullSyncController):
+    """Chen et al. (2016): fixed c < n for the whole run."""
+
+    def __init__(self, n_workers: int, cutoff: Optional[int] = None,
+                 drop_frac: float = 0.06):
+        super().__init__(n_workers)
+        self.c = cutoff if cutoff is not None else max(
+            1, int(round(n_workers * (1 - drop_frac))))
+
+    def predict_cutoff(self) -> int:
+        return self.c
+
+
+class ElfvingController(FullSyncController):
+    """Analytic normality baseline: running (mu, sigma) -> Eq. 3 cutoff."""
+
+    def __init__(self, n_workers: int, warmup: int = 5,
+                 min_frac: float = 0.5):
+        super().__init__(n_workers)
+        self.buf: list = []
+        self.warmup = warmup
+        self.min_frac = min_frac
+
+    def predict_cutoff(self) -> int:
+        if len(self.buf) < self.warmup:
+            return self.n
+        data = np.concatenate(self.buf[-50:])
+        return elfving.elfving_cutoff(self.n, float(data.mean()),
+                                      float(data.std()), self.min_frac)
+
+    def observe(self, times, finished_mask=None):
+        t = np.asarray(times, np.float64)
+        if finished_mask is not None:
+            t = t[np.asarray(finished_mask, bool)]
+        self.buf.append(t)
+
+
+@dataclass
+class CutoffController:
+    """The paper's dynamic controller (DMM + amortized inference).
+
+    Keeps the lag-l window of (imputed) runtime vectors; each iteration:
+      1. predict K samples of the next joint runtime vector (Eq. 5),
+      2. c* = argmax_c E[c / x_(c)]  (throughput-optimal cutoff),
+      3. after the step, impute censored runtimes from the predictive
+         distribution left-truncated at the observed cutoff time (§4.2).
+    """
+    model: RuntimeModel
+    k_samples: int = 64
+    min_frac: float = 0.5
+    seed: int = 0
+
+    _window: list = field(default_factory=list)
+    _pending_pred: Optional[tuple] = None
+    _step: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    @property
+    def n(self) -> int:
+        return self.model.n_workers
+
+    @property
+    def warmed_up(self) -> bool:
+        return len(self._window) >= self.model.lag + 1
+
+    def seed_window(self, traces: np.ndarray):
+        """Warm-start the lag window from recorded traces."""
+        for row in np.asarray(traces)[-(self.model.lag + 1):]:
+            self._window.append(np.asarray(row, np.float64))
+
+    def predict_cutoff(self) -> int:
+        self._step += 1
+        if not self.warmed_up:
+            self._pending_pred = None
+            return self.n
+        w = np.stack(self._window[-(self.model.lag + 1):])
+        samples, mu, std = self.model.predict_next(
+            w, self.k_samples, seed=self.seed + self._step)
+        # per-worker predictive moments (for censoring) from the MC samples
+        self._pending_pred = (
+            mu.mean(axis=0),
+            np.sqrt(std.mean(axis=0) ** 2 + mu.var(axis=0)))
+        return order_stats.optimal_cutoff(samples, self.min_frac)
+
+    def predicted_order_stats(self):
+        """(mean, std) of predicted order statistics for the next step."""
+        if not self.warmed_up:
+            return None
+        w = np.stack(self._window[-(self.model.lag + 1):])
+        samples, _, _ = self.model.predict_next(
+            w, self.k_samples, seed=self.seed + self._step)
+        return order_stats.mc_order_stats(samples)
+
+    def observe(self, times, finished_mask=None):
+        t = np.asarray(times, np.float64)
+        if finished_mask is None or bool(np.all(finished_mask)):
+            self._window.append(t)
+            return
+        mask = np.asarray(finished_mask, bool)
+        cutoff_time = float(t[mask].max())
+        if self._pending_pred is None:
+            # warmup fallback: impute with the max observed time
+            imputed = np.where(mask, t, cutoff_time)
+        else:
+            mu, std = self._pending_pred
+            imputed = censoring.impute_censored(t, mask, mu, std,
+                                                cutoff_time, self._rng)
+        self._window.append(imputed)

@@ -1,0 +1,41 @@
+"""Censored run-time imputation (paper §4.2).
+
+Workers dropped at the cutoff never report their runtimes; the guide RNN was
+trained on fully-observed vectors, so missing entries are imputed by sampling
+each worker's predictive distribution left-truncated at the observed cutoff
+time x_(c):
+
+    p(x | x > x_c) = p(x) / int_{x_c}^inf p(x) dx
+
+Sampling via inverse-CDF on the truncated normal.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cutoff._normal import ndtr as _ndtr, ndtri as _ndtri
+
+
+
+
+def truncated_normal_sample(mu, sigma, lower, rng) -> np.ndarray:
+    """Sample x ~ N(mu, sigma^2) | x > lower (elementwise)."""
+    mu = np.asarray(mu, np.float64)
+    sigma = np.maximum(np.asarray(sigma, np.float64), 1e-9)
+    a = _ndtr((np.asarray(lower) - mu) / sigma)
+    a = np.clip(a, 0.0, 1.0 - 1e-9)
+    u = a + (1.0 - a) * rng.uniform(size=mu.shape)
+    return mu + sigma * _ndtri(np.clip(u, 1e-12, 1 - 1e-12))
+
+
+def impute_censored(observed: np.ndarray, finished_mask: np.ndarray,
+                    pred_mu: np.ndarray, pred_std: np.ndarray,
+                    cutoff_time: float, rng) -> np.ndarray:
+    """Fill unobserved worker runtimes with truncated predictive samples.
+
+    observed: (n,) runtimes (garbage where ~finished_mask);
+    pred_mu/pred_std: (n,) per-worker predictive moments for THIS iteration.
+    """
+    imputed = truncated_normal_sample(pred_mu, pred_std,
+                                      np.full_like(pred_mu, cutoff_time), rng)
+    return np.where(finished_mask, observed, imputed)

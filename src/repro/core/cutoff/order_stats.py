@@ -1,0 +1,50 @@
+"""Throughput-optimal cutoff from Monte-Carlo order statistics (paper §3).
+
+Throughput of waiting for the fastest c of n workers:  Omega(c) = c / x_(c),
+where x_(c) is the c-th order statistic of the joint runtime vector.  Given K
+predictive samples of the next runtime vector, sort each, average Omega per
+cutoff, argmax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def mc_order_stats(samples: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """samples: (K, n) -> (mean (n,), std (n,)) of each order statistic."""
+    s = np.sort(np.asarray(samples), axis=1)
+    return s.mean(axis=0), s.std(axis=0)
+
+
+def throughput_curve(samples: np.ndarray) -> np.ndarray:
+    """E[Omega(c)] for c = 1..n, from MC samples (K, n)."""
+    s = np.sort(np.asarray(samples), axis=1)
+    c = np.arange(1, s.shape[1] + 1, dtype=np.float64)
+    return (c[None, :] / np.maximum(s, 1e-9)).mean(axis=0)
+
+
+def optimal_cutoff(samples: np.ndarray, min_frac: float = 0.0) -> int:
+    """argmax_c E[Omega(c)]; optionally restrict c >= min_frac * n.
+
+    min_frac=0 reproduces the paper exactly; a floor (e.g. 0.5) bounds the
+    gradient-noise increase when the model predicts an extreme tail.
+    """
+    omega = throughput_curve(samples)
+    n = omega.shape[0]
+    lo = int(np.ceil(min_frac * n))
+    c = int(np.argmax(omega[lo:]) + lo) + 1
+    return min(c, n)
+
+
+def oracle_cutoff(actual: np.ndarray) -> int:
+    """Best cutoff in hindsight for one observed runtime vector (n,)."""
+    s = np.sort(np.asarray(actual))
+    c = np.arange(1, s.shape[0] + 1, dtype=np.float64)
+    return int(np.argmax(c / np.maximum(s, 1e-9))) + 1
+
+
+def iter_time(actual: np.ndarray, c: int) -> float:
+    """Wall-clock of one SGD iteration when waiting for the fastest c."""
+    return float(np.sort(np.asarray(actual))[c - 1])

@@ -1,0 +1,138 @@
+"""RuntimeModel: ELBO training + real-time posterior-predictive inference.
+
+Implements the paper's Eq. 5 approximation: sample z_{T-l:T} trajectories
+from the guide, push the last-step marginal through the transition and
+emission to obtain K Monte-Carlo samples of the next joint runtime vector
+x_{T+1} — fast enough for the parameter server's inner loop.
+
+Observations are normalized by 2x the mean of the first lag window (paper
+§3.1.3) so one trained model transfers across network/batch-size scales.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.runtime_model import dmm as D
+from repro.core.runtime_model import guide as G
+
+
+@dataclass
+class RuntimeModel:
+    n_workers: int
+    lag: int = 20
+    z_dim: int = 32
+    hidden: int = 64
+    params: dict = field(default=None, repr=False)
+    norm_scale: float = 1.0
+
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        self.params = {
+            "dmm": D.dmm_init(k1, self.n_workers, self.z_dim, self.hidden),
+            "guide": G.guide_init(k2, self.n_workers, self.z_dim,
+                                  self.hidden),
+        }
+        return self
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=())
+    def _elbo(params, x, key):
+        """x: (B, T, n) normalized windows. Single-sample ELBO."""
+        zs, mus, stds = G.guide_sample(params["guide"], x, key)
+        dmm = params["dmm"]
+        B, T, n = x.shape
+        # log p(x_t | z_t)
+        emu, estd = D.emission(dmm, zs)
+        lpx = jnp.sum(D.gaussian_logpdf(x, emu, estd), axis=(1, 2))
+        # log p(z_t | z_{t-1}) (z_0 prior from learned z0)
+        z_prev = jnp.concatenate(
+            [jnp.broadcast_to(dmm["z0_mu"], (B, 1, zs.shape[-1])),
+             zs[:, :-1]], axis=1)
+        tmu, tstd = D.transition(dmm, z_prev)
+        lpz = jnp.sum(D.gaussian_logpdf(zs, tmu, tstd), axis=(1, 2))
+        # log q(z_t | ...)
+        lqz = jnp.sum(D.gaussian_logpdf(zs, mus, stds), axis=(1, 2))
+        return jnp.mean(lpx + lpz - lqz)
+
+    def elbo(self, x, key):
+        return self._elbo(self.params, x, key)
+
+    # ------------------------------------------------------------------
+    def fit(self, traces: np.ndarray, *, steps: int = 800, batch: int = 16,
+            lr: float = 3e-3, seed: int = 0, verbose: bool = False,
+            clip: float = 5.0):
+        """traces: (T_total, n) raw runtimes from the instrumented cluster."""
+        traces = np.asarray(traces, np.float32)
+        assert traces.shape[1] == self.n_workers
+        self.norm_scale = float(2.0 * traces[: self.lag + 1].mean())
+        xs = traces / self.norm_scale
+        T = self.lag + 1
+        n_windows = xs.shape[0] - T
+        if n_windows < 1:
+            raise ValueError("trace too short for the lag window")
+        windows = np.stack([xs[i:i + T] for i in range(n_windows)])
+
+        if self.params is None:
+            self.init(seed)
+        opt = optim.clip_by_global_norm(optim.adam(lr), clip)
+        state = opt.init(self.params)
+        params = self.params
+
+        @jax.jit
+        def step_fn(params, state, batch_x, key):
+            loss, grads = jax.value_and_grad(
+                lambda p: -self._elbo(p, batch_x, key))(params)
+            ups, state = opt.update(grads, state, params)
+            return optim.apply_updates(params, ups), state, loss
+
+        rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed + 1)
+        losses = []
+        for i in range(steps):
+            idx = rng.integers(0, n_windows, size=min(batch, n_windows))
+            key, sub = jax.random.split(key)
+            params, state, loss = step_fn(params, state,
+                                          jnp.asarray(windows[idx]), sub)
+            losses.append(float(loss))
+            if verbose and i % 100 == 0:
+                print(f"  elbo step {i}: -elbo={float(loss):.3f}")
+        self.params = params
+        return losses
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=("k_samples",))
+    def _predict(params, window_norm, key, k_samples: int):
+        """window_norm: (T, n) -> K samples of x_{T+1} plus (mu, std)."""
+        x = jnp.broadcast_to(window_norm[None], (k_samples,)
+                             + window_norm.shape)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        zs, _, _ = G.guide_sample(params["guide"], x, k1)
+        z_T = zs[:, -1]                                   # (K, zd)
+        tmu, tstd = D.transition(params["dmm"], z_T)
+        z_next = tmu + tstd * jax.random.normal(k2, tmu.shape)
+        emu, estd = D.emission(params["dmm"], z_next)     # (K, n)
+        x_next = emu + estd * jax.random.normal(k3, emu.shape)
+        return x_next, emu, estd
+
+    def predict_next(self, window: np.ndarray, k_samples: int = 64,
+                     seed: int = 0):
+        """window: (lag+1, n) raw runtimes.
+
+        Returns (samples (K, n), mu (K, n), std (K, n)) in RAW time units.
+        """
+        w = jnp.asarray(window, jnp.float32) / self.norm_scale
+        key = jax.random.PRNGKey(seed)
+        s, mu, std = self._predict(self.params, w, key, k_samples)
+        return (np.asarray(s) * self.norm_scale,
+                np.asarray(mu) * self.norm_scale,
+                np.asarray(std) * self.norm_scale)

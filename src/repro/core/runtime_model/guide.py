@@ -1,0 +1,84 @@
+"""Amortized inference network (paper §3.1.3): structured left-right guide.
+
+    q_phi(z_t | z_{t-1}, x_{T-l:T}) = N(mu_q, sigma_q)
+    h_out   = 1/3 * (MLP_1(z_{t-1}, Tanh) + h_left[t] + h_right[t])
+    h_left  = RNN(x_{T-l:t-1}, ReLU)   (forward pass)
+    h_right = RNN(x_{t+1:T},  ReLU)    (backward pass)
+    mu_q    = MLP_1(h_out, Identity);  sigma_q = MLP_1(mu_q, Softplus)
+
+Sampling is sequential in t (q conditions on the sampled z_{t-1}) under a
+lax.scan; the RNN sweeps are computed once per window.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runtime_model.dmm import (_ID, _RELU, _SOFTPLUS, _TANH, _mlp,
+                                          _mlp_init)
+from repro.models.layers import dense_init
+
+
+def guide_init(key, n_workers: int, z_dim: int = 32, hidden: int = 64):
+    ks = jax.random.split(key, 7)
+    def rnn(k):
+        k1, k2 = jax.random.split(k)
+        return {"wx": dense_init(k1, n_workers, hidden, jnp.float32),
+                "wh": dense_init(k2, hidden, hidden, jnp.float32),
+                "b": jnp.zeros((hidden,))}
+    return {
+        "rnn_left": rnn(ks[0]),
+        "rnn_right": rnn(ks[1]),
+        "z_proj": _mlp_init(ks[2], (z_dim, hidden)),
+        "mu": _mlp_init(ks[3], (hidden, z_dim)),
+        "std": _mlp_init(ks[4], (z_dim, z_dim)),
+    }
+
+
+def _rnn_sweep(p, xs):
+    """xs: (T, B, n) -> hidden states (T, B, hidden), ReLU RNN."""
+    def step(h, x):
+        h = _RELU(x @ p["wx"] + h @ p["wh"] + p["b"])
+        return h, h
+    B = xs.shape[1]
+    h0 = jnp.zeros((B, p["wh"].shape[0]))
+    _, hs = jax.lax.scan(step, h0, xs)
+    return hs
+
+
+def guide_sample(guide_params, x_window, key, z0=None):
+    """Sample a z trajectory for one window.
+
+    x_window: (B, T, n) normalized runtimes.
+    Returns (zs (B, T, zd), mus, stds) — everything needed for the ELBO.
+    """
+    from repro.core.runtime_model import dmm as D
+    B, T, n = x_window.shape
+    xt = jnp.moveaxis(x_window, 1, 0)             # (T, B, n)
+    h_left_all = _rnn_sweep(guide_params["rnn_left"], xt)
+    h_right_all = _rnn_sweep(guide_params["rnn_right"], xt[::-1])[::-1]
+    # h_left[t] must summarize x_{<t}; h_right[t] summarizes x_{>t}
+    hidden = h_left_all.shape[-1]
+    zeros = jnp.zeros((1, B, hidden))
+    h_left = jnp.concatenate([zeros, h_left_all[:-1]], axis=0)
+    h_right = jnp.concatenate([h_right_all[1:], zeros], axis=0)
+
+    zd = guide_params["mu"][0]["w"].shape[1]
+    if z0 is None:
+        z0 = jnp.zeros((B, zd))
+    keys = jax.random.split(key, T)
+
+    def step(z_prev, inp):
+        hl, hr, k = inp
+        hz = _TANH(_mlp(guide_params["z_proj"], z_prev, (_ID,)))
+        h_out = (hz + hl + hr) / 3.0
+        mu = _mlp(guide_params["mu"], h_out, (_ID,))
+        std = _mlp(guide_params["std"], mu, (_SOFTPLUS,)) + 1e-3
+        z = mu + std * jax.random.normal(k, mu.shape)
+        return z, (z, mu, std)
+
+    _, (zs, mus, stds) = jax.lax.scan(step, z0, (h_left, h_right, keys))
+    mv = lambda t: jnp.moveaxis(t, 0, 1)
+    return mv(zs), mv(mus), mv(stds)

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+TARGET: TPU MXU/VMEM.  Grid (B, H, Sq/bq, Sk/bk) with the last dim
+sequential ("arbitrary"); running (m, l, acc) live in VMEM scratch and the
+output tile is written once on the final K block — the K/V stream never
+materializes an (Sq, Sk) score matrix in HBM.
+
+GQA is handled in the BlockSpec index maps (query head h reads KV head
+h // group).  Causal + sliding-window masking is applied with block-local
+iota against global offsets; fully-masked blocks are skipped via pl.when
+(grid-level skipping needs per-row KV bounds — a noted production follow-up).
+
+VALIDATED in interpret mode on CPU against ``ref.reference_attention``
+(= the model stack's attn_core contract) — see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level skip test (static per (iq, ik) given causal/window)
+    q_hi = q_start + block_q - 1
+    k_lo = k_start
+    run = True
+    if causal:
+        run = k_lo <= q_hi
+    # window lower bound: newest query row still sees k >= q_hi - window + 1
+    # (older rows see earlier k; block partially masked, handled by the mask)
+
+    def body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    if causal:
+        pl.when(k_lo <= q_hi)(body)
+    else:
+        body()
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
+
+    Self-attention with aligned positions (q row i is global position
+    i + Sk - Sq); covers the train/prefill layouts used by the model stack.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_k = Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (B, H, Sq // bq, n_k)
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, block_q=bq, block_k=bk, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, iq, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, iq, ik, g=group: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Pallas TPU masked gradient aggregation (the cutoff combine, paper §4.3).
+
+TARGET: TPU VPU.  On a host aggregating W virtual-worker sub-gradients
+(stacked (W, N)), the cutoff update is sum_w bit_w * g_w / sum(bit) — a
+bandwidth-bound weighted reduction.  The kernel fuses mask-scale-accumulate
+in one HBM pass over the stacked buffer; the result feeds the bit-array ring
+all-reduce across hosts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(g_ref, mask_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)             # (W, bc)
+    m = mask_ref[...].astype(jnp.float32)          # (W, 1) in SMEM-ish VMEM
+    c = jnp.maximum(jnp.sum(m), 1.0)
+    o_ref[...] = (jnp.sum(g * m, axis=0, keepdims=True) / c
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def masked_grad_agg(grads, mask, *, block: int = 2048,
+                    interpret: bool = False):
+    """grads: (W, N); mask: (W, 1) float -> (1, N) masked mean over workers.
+
+    N must be a multiple of 128 (ops.py pads).
+    """
+    W, N = grads.shape
+    bc = min(block, N)
+    assert N % bc == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(N // bc,),
+        in_specs=[pl.BlockSpec((W, bc), lambda j: (0, j)),
+                  pl.BlockSpec((W, 1), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((1, bc), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, N), grads.dtype),
+        interpret=interpret,
+    )(grads, mask)

@@ -1,0 +1,117 @@
+"""Pallas TPU chunkwise mLSTM (matrix-memory linear attention, exp gating).
+
+TARGET: TPU.  Grid (B, H, n_chunks) with the chunk dim sequential
+("arbitrary"); the (hd x hd) matrix memory C, normalizer n and stabilizer m
+are carried across chunks in VMEM scratch and NEVER round-trip to HBM — the
+hardware-adaptation of GPU recurrent kernels (DESIGN.md): intra-chunk math
+is two MXU matmuls (q k^T and p v), inter-chunk state is a VMEM-resident
+rank-hd update.
+
+Matches ``repro.models.ssm.linear_recurrence(..., normalize=True)`` (the
+pure-jnp oracle in ref.py) for scale = 1/sqrt(hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, g_ref, i_ref, o_ref, c_scr, n_scr, m_scr,
+            *, chunk: int, hd: int, scale: float):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # (c, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    g = g_ref[0, :, 0].astype(jnp.float32)              # (c,) log decay
+    ig = i_ref[0, :, 0].astype(jnp.float32)             # (c,) log input gate
+
+    lg = jnp.cumsum(g)                                  # within-chunk decay
+    tot = lg[-1]
+    m_prev = m_scr[0]
+    # intra-chunk log-weight matrix D[t,s] = lg_t - lg_s + i_s  (s <= t)
+    D = lg[:, None] - lg[None, :] + ig[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    D = jnp.where(tri, D, NEG)
+    m_intra = jnp.max(D, axis=1)
+    lg_e = lg + m_prev
+    m_out = jnp.maximum(lg_e, m_intra)                  # (c,)
+
+    W = jnp.exp(D - m_out[:, None])
+    dot = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    WS = W * dot
+    num = jax.lax.dot_general(WS, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jnp.sum(WS, axis=1)
+    sc_e = jnp.exp(lg_e - m_out)
+    num += sc_e[:, None] * jax.lax.dot_general(
+        q, c_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    den += sc_e * jnp.sum(q * n_scr[...][None, :] if False else
+                          q * jnp.broadcast_to(n_scr[...], q.shape), axis=1)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_out))
+    o_ref[0, :, 0, :] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # ---- state update (chunk contribution at the chunk end) ----
+    w_s = tot - lg + ig                                 # carry-to-end weight
+    m_loc = jnp.max(w_s)
+    m_new = jnp.maximum(m_prev + tot, m_loc)
+    sc = jnp.exp(w_s - m_new)
+    kc = k * sc[:, None]
+    c_new = (c_scr[...] * jnp.exp(m_prev + tot - m_new)
+             + jax.lax.dot_general(kc, v, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    n_new = (n_scr[...] * jnp.exp(m_prev + tot - m_new)
+             + jnp.sum(kc, axis=0))
+    c_scr[...] = c_new
+    n_scr[...] = n_new
+    m_scr[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, g, i, *, chunk: int = 128, interpret: bool = False):
+    """q/k/v: (B, S, H, hd); g/i: (B, S, H) log gates -> y (B, S, H, hd) f32.
+
+    Output matches the stabilized normalized recurrence
+    h_t = (q_t . C_t) / max(|q_t . n_t|, exp(-m_t)) with C/n/m carried across
+    chunks in VMEM.
+    """
+    B, S, H, hd = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    n_chunks = S // c
+    scale = 1.0 / math.sqrt(hd)
+    kern = functools.partial(_kernel, chunk=c, hd=hd, scale=scale)
+
+    qspec = pl.BlockSpec((1, c, 1, hd), lambda b, h, ic: (b, ic, h, 0))
+    gspec = pl.BlockSpec((1, c, 1), lambda b, h, ic: (b, ic, h))
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, n_chunks),
+        in_specs=[qspec, qspec, qspec, gspec, gspec],
+        out_specs=pl.BlockSpec((1, c, 1, hd), lambda b, h, ic: (b, ic, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, g, i)

@@ -1,0 +1,117 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings per (arch x shape).
+
+No device allocation — everything is abstract, exactly what
+``jax.jit(...).lower()`` needs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import model as M
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_structs(cfg, shape, *, with_labels: bool) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        S = 1
+    d = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.mrope_sections:
+        d["positions"] = _sds((3, B, S), jnp.int32)
+    else:
+        d["positions"] = _sds((B, S), jnp.int32)
+    if with_labels:
+        d["labels"] = _sds((B, S), jnp.int32)
+        d["weights"] = _sds((B,), jnp.float32)
+    if cfg.frontend == "vision_patches" and shape.kind != "decode":
+        d["patch_embeds"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        d["image_mask"] = _sds((B, S), jnp.bool_)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        d["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+    return d
+
+
+def batch_shardings(cfg, batch, lay: shd.Layout) -> Dict[str, Any]:
+    if lay.mesh is None:
+        return {k: None for k in batch}
+    mesh = lay.mesh
+    dp = lay.dp if lay.dp else None
+    seq_ax = lay.axis("sp")  # None in decode layout
+
+    def spec(k, v):
+        if k == "weights":
+            return P(dp)
+        if k == "positions" and v.ndim == 3:
+            return P(None, dp, seq_ax)
+        if k in ("frames", "patch_embeds"):
+            return P(dp, seq_ax, None)
+        if v.ndim >= 2 and v.shape[1] > 1:
+            return P(dp, seq_ax)
+        return P(dp)
+
+    def shardable(k, v):
+        # batch must divide dp; gb=1 long-context replicates over dp
+        bdim = 1 if (k == "positions" and v.ndim == 3) else 0
+        return v.shape[bdim] % max(lay.dp_size, 1) == 0
+
+    out = {}
+    for k, v in batch.items():
+        s = spec(k, v)
+        if not shardable(k, v):
+            parts = list(s)
+            bdim = 1 if (k == "positions" and v.ndim == 3) else 0
+            parts[bdim] = None
+            s = P(*parts)
+        out[k] = NamedSharding(mesh, s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (decode).
+# ---------------------------------------------------------------------------
+
+
+def cache_shardings(cfg, caches, lay: shd.Layout, segs=None):
+    if lay.mesh is None:
+        return jax.tree.map(lambda _: None, caches)
+    segs = segs or M.build_segments(M.layer_specs(cfg))
+
+    def walk(node, name, stacked):
+        if isinstance(node, dict):
+            return {k: walk(v, k, stacked) for k, v in node.items()}
+        if hasattr(node, "_fields"):  # ScanState
+            return type(node)(*[
+                walk(getattr(node, f), f, stacked) for f in node._fields])
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, name, stacked) for v in node]
+            return tuple(t) if isinstance(node, tuple) else t
+        return NamedSharding(
+            lay.mesh, M.cache_pspec(name, node.shape, lay, stacked))
+
+    out = []
+    for si, seg in enumerate(segs):
+        out.append([walk(c, "", seg.repeats > 1) for c in caches[si]])
+    return out
+
+
+def input_specs(cfg, shape, lay: shd.Layout, *, with_labels=None):
+    """Returns (args_structs, args_shardings) for the entry point of
+    ``shape.kind`` — train: (state-less) batch; prefill: batch; decode:
+    (tokens, pos, caches, positions)."""
+    with_labels = (shape.kind == "train") if with_labels is None else with_labels
+    batch = batch_structs(cfg, shape, with_labels=with_labels)
+    bshard = batch_shardings(cfg, batch, lay)
+    if shape.kind != "decode":
+        return batch, bshard
+    caches = M.cache_structs(cfg, shape.global_batch, shape.seq_len)
+    cshard = cache_shardings(cfg, caches, lay)
+    return (batch, caches), (bshard, cshard)

@@ -1,0 +1,287 @@
+"""Training entry points: cutoff train step + the production Trainer.
+
+``make_train_step`` builds the jit-able step:
+
+  * per-example weights carry the cutoff bit-array (paper Alg. 1 /
+    §4.3 production variant) — masked gradients, renormalized by c, with no
+    extra collectives beyond the DP psum GSPMD already emits;
+  * optional gradient accumulation (microbatching) — the activation-memory
+    knob, also what overlaps per-microbatch gradient reduce with compute;
+  * ZeRO-1/3: params FSDP-sharded over "model", optimizer moments optionally
+    sharded over "data" too.
+
+The ``Trainer`` is the host-side driver: controller -> bit-array -> weights,
+per-worker sampling with replacement, simulated (or measured) step times,
+checkpoint/restart, elastic resize.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.core import aggregation
+from repro.dist import sharding as shd
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# Train step.
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg, aux_coef: float = 0.01):
+    from repro.perf.knobs import knobs
+
+    def loss_fn(params, batch, normalizer):
+        w = batch.get("weights")
+        if knobs().ce_impl == "ring":
+            x, _, aux = M.forward(cfg, params, batch, mode="train",
+                                  head=False)
+            ce_sum = M.ring_ce_sum(cfg, params, x, batch["labels"], w)
+            loss = ce_sum / normalizer
+            return loss + aux_coef * aux, {"ce": loss, "aux": aux}
+        if knobs().ce_chunk > 0:
+            x, _, aux = M.forward(cfg, params, batch, mode="train",
+                                  head=False)
+            ce_sum = M.chunked_ce_sum(cfg, params, x, batch["labels"], w,
+                                      knobs().ce_chunk)
+            loss = ce_sum / normalizer
+            return loss + aux_coef * aux, {"ce": loss, "aux": aux}
+        logits, _, aux = M.forward(cfg, params, batch, mode="train")
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, batch["labels"][..., None],
+                                 axis=-1)[..., 0]
+        ce = lse - ll
+        if w is not None:
+            wb = jnp.broadcast_to(w.astype(jnp.float32)[:, None], ce.shape)
+            ce = ce * wb
+        loss = jnp.sum(ce) / normalizer
+        return loss + aux_coef * aux, {"ce": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer: optim.Optimizer, *,
+                    grad_accum: int = 1, aux_coef: float = 0.01,
+                    compress_pod_grads: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", ["ef"]}.  batch["weights"] is the per-example
+    cutoff mask expanded by ``aggregation.example_weights``.
+    """
+    loss_fn = make_loss_fn(cfg, aux_coef)
+
+    def normalizer_of(batch):
+        w = batch.get("weights")
+        B, S = batch["tokens"].shape
+        if w is None:
+            return jnp.asarray(B * S, jnp.float32)
+        return jnp.maximum(jnp.sum(w.astype(jnp.float32)) * S, 1e-6)
+
+    def grads_of(params, batch):
+        norm = normalizer_of(batch)
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, norm)
+            return loss, metrics, grads
+
+        def split(k, v):
+            if k == "positions" and v.ndim == 3:
+                return v.reshape(
+                    (3, grad_accum, v.shape[1] // grad_accum)
+                    + v.shape[2:]).swapaxes(0, 1)
+            return v.reshape((grad_accum, v.shape[0] // grad_accum)
+                             + v.shape[1:])
+
+        mb = {k: split(k, v) for k, v in batch.items()}
+
+        def body(carry, mbatch):
+            g_acc, l_acc, a_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch, norm)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss, a_acc + metrics["aux"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss, aux), _ = jax.lax.scan(
+            body, (g0, jnp.float32(0), jnp.float32(0)), mb)
+        return loss, {"ce": loss, "aux": aux / grad_accum}, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        if compress_pod_grads:
+            grads, ef = optim.error_feedback_compress(grads,
+                                                      state.get("ef"))
+            new_ef = ef
+        ups, opt = optimizer.update(grads, state["opt"], state["params"])
+        params = optim.apply_updates(state["params"], ups)
+        new_state = {"params": params, "opt": opt}
+        if compress_pod_grads:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss,
+                       gnorm=optim.global_norm(grads))
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for the train state.
+# ---------------------------------------------------------------------------
+
+
+def stacked_paths_for(cfg):
+    segs = M.build_segments(M.layer_specs(cfg))
+    paths = [f"segments/{i}" for i, s in enumerate(segs) if s.repeats > 1]
+    if cfg.is_encoder_decoder:
+        esegs = M.build_segments(M.encoder_layer_specs(cfg))
+        paths += [f"encoder/segments/{i}" for i, s in enumerate(esegs)
+                  if s.repeats > 1]
+    return tuple(paths)
+
+
+def state_shardings(cfg, params_tree, lay: shd.Layout, *,
+                    zero1: bool = False, has_ef: bool = False):
+    """NamedShardings for {"params", "opt"} given an (abstract) params tree.
+
+    zero1: optimizer moments are additionally sharded over "data" on the dim
+    the parameter is already "model"-sharded on (ZeRO-1 on top of ZeRO-3);
+    XLA inserts the per-step weight-delta all-gather over "data".
+    """
+    sp = stacked_paths_for(cfg)
+    pshard = shd.named_sharding(params_tree, lay, stacked_paths=sp)
+
+    def widen(leaf, ns):
+        if ns is None or lay.mesh is None:
+            return ns
+        dsize = 1
+        for a in lay.dp:
+            if a == "data":
+                dsize = lay.mesh.shape[a]
+        spec = list(ns.spec) + [None] * (leaf.ndim - len(ns.spec))
+        for i, ax in enumerate(spec):
+            if ax == lay.model_axis:
+                tp = lay.mesh.shape[lay.model_axis]
+                if leaf.shape[i] % (tp * dsize) == 0:
+                    spec[i] = (lay.model_axis, "data")
+                break
+        return NamedSharding(lay.mesh, P(*spec))
+
+    mom = (jax.tree.map(widen, params_tree, pshard) if zero1 else pshard)
+    opt_shard = {"step": NamedSharding(lay.mesh, P()) if lay.mesh else None,
+                 "m": mom, "v": mom, "mu": mom}
+    out = {"params": pshard, "opt": opt_shard}
+    if has_ef:
+        out["ef"] = pshard
+    return out
+
+
+def abstract_state(cfg, optimizer: optim.Optimizer, key=None):
+    """Shape-only train state via jax.eval_shape (no allocation)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def build():
+        params = M.init_model(cfg, key)
+        return {"params": params, "opt": optimizer.init(params)}
+
+    return jax.eval_shape(build)
+
+
+def filter_opt_shardings(opt_shard, opt_state_tree):
+    """Keep only the sharding entries present in the actual opt state."""
+    return {k: opt_shard[k] if k in opt_shard else None
+            for k in opt_state_tree}
+
+
+# ---------------------------------------------------------------------------
+# Production Trainer (host-side driver).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Trainer:
+    """Cutoff-SGD trainer: controller + masked aggregation + fault tolerance.
+
+    ``n_workers`` virtual workers map onto DP shards (one worker per shard on
+    a real mesh; on CPU they are simulated).  ``timer`` provides per-worker
+    step times each iteration: a ClusterSim / TraceReplay in this container,
+    per-host wall-clock measurement on real hardware.
+    """
+    cfg: Any
+    step_fn: Callable
+    data: Any
+    controller: Any
+    timer: Any = None
+    n_workers: int = 8
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+
+    state: Dict = None
+    step: int = 0
+    sim_clock: float = 0.0
+    history: list = field(default_factory=list)
+
+    def restore_or_init(self, init_state_fn):
+        from repro.checkpoint import store
+        if self.ckpt_dir and store.latest_step(self.ckpt_dir) is not None:
+            example = init_state_fn()
+            restored = store.restore(self.ckpt_dir,
+                                     {"state": example, "meta": {
+                                         "step": 0, "clock": 0.0}})
+            self.state = restored["state"]
+            self.step = int(restored["meta"]["step"])
+            self.sim_clock = float(restored["meta"]["clock"])
+        else:
+            self.state = init_state_fn()
+        return self
+
+    def run(self, n_steps: int, *, eval_fn=None, eval_every: int = 0,
+            verbose: bool = False):
+        from repro.checkpoint import store
+        ckpt = (store.AsyncCheckpointer(self.ckpt_dir, self.keep)
+                if self.ckpt_dir else None)
+        n = self.n_workers
+        for _ in range(n_steps):
+            c = int(self.controller.predict_cutoff())
+            times = (self.timer.step() if self.timer is not None
+                     else np.ones(n))
+            # fastest c workers participate (the PS's bit array)
+            order = np.argsort(times)
+            mask = np.zeros(n, np.float32)
+            mask[order[:c]] = 1.0
+            iter_time = float(times[order[c - 1]])
+            self.controller.observe(times, times <= iter_time + 1e-12)
+
+            batch = self.data.batch(self.step)
+            batch = dict(batch)
+            batch["weights"] = aggregation.example_weights(
+                mask, batch["tokens"].shape[0])
+            self.state, metrics = self.step_fn(self.state, batch)
+            self.step += 1
+            self.sim_clock += iter_time
+            rec = {"step": self.step, "clock": self.sim_clock, "c": c,
+                   "iter_time": iter_time,
+                   "loss": float(metrics["loss"])}
+            if eval_fn and eval_every and self.step % eval_every == 0:
+                rec["eval"] = float(eval_fn(self.state))
+            self.history.append(rec)
+            if verbose and self.step % 20 == 0:
+                print(f"  step {self.step}: loss={rec['loss']:.4f} c={c}/{n}"
+                      f" t={iter_time:.3f}s clock={self.sim_clock:.1f}s")
+            if ckpt and self.step % self.ckpt_every == 0:
+                ckpt.save(self.step, {
+                    "state": self.state,
+                    "meta": {"step": self.step, "clock": self.sim_clock}})
+        if ckpt:
+            ckpt.wait()
+        return self.history

@@ -1,0 +1,57 @@
+"""The paper's own workload: a small 3-layer CNN classifier (MNIST-class).
+
+Pure JAX (lax.conv_general_dilated); trained on the synthetic image task
+(no dataset downloads in this container) for the Fig. 4 wall-clock
+convergence reproduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def cnn_init(key, n_classes: int = 10):
+    ks = jax.random.split(key, 4)
+    w = lambda k, shape, fan: (jax.random.normal(k, shape, jnp.float32)
+                               * (1.0 / jnp.sqrt(fan)))
+    return {
+        "c1": {"w": w(ks[0], (3, 3, 1, 16), 9), "b": jnp.zeros(16)},
+        "c2": {"w": w(ks[1], (3, 3, 16, 32), 9 * 16), "b": jnp.zeros(32)},
+        "c3": {"w": w(ks[2], (3, 3, 32, 32), 9 * 32), "b": jnp.zeros(32)},
+        "fc": {"w": dense_init(ks[3], 7 * 7 * 32, n_classes, jnp.float32),
+               "b": jnp.zeros(n_classes)},
+    }
+
+
+def _conv(x, p, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + p["b"])
+
+
+def cnn_apply(params, x):
+    """x: (B, 28, 28) -> logits (B, 10)."""
+    h = x[..., None]
+    h = _conv(h, params["c1"])
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")          # 14x14
+    h = _conv(h, params["c2"])
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")          # 7x7
+    h = _conv(h, params["c3"])
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def cnn_loss(params, x, y, weights=None):
+    logits = cnn_apply(params, x)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    ce = lse - ll
+    if weights is None:
+        return jnp.mean(ce)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(w * ce) / jnp.maximum(jnp.sum(w), 1e-6)

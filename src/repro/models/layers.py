@@ -1,0 +1,168 @@
+"""Core pure-JAX layers: inits, norms, MLPs, RoPE (std / partial / M-RoPE)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Init helpers.
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+            ).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg, d: int, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+    return {"scale": ones((d,), dtype)}
+
+
+def apply_norm(cfg, params, x):
+    p = shd.use_weight(params)
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps):
+    """Per-head RMS norm (gemma3 qk-norm); x: (..., hd)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs.
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg, key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], d, d_ff, dtype)
+        p["w_up"] = dense_init(ks[1], d, d_ff, dtype)
+    else:
+        p["w_up"] = dense_init(ks[1], d, d_ff, dtype)
+        if cfg.mlp_bias:
+            p["b_up"] = zeros((d_ff,), dtype)
+    p["w_down"] = dense_init(ks[2], d_ff, d, dtype)
+    if cfg.mlp_bias:
+        p["b_down"] = zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(cfg, params, x):
+    p = shd.use_weight(params)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h, approximate=True)
+    h = shd.act(h, "dp", "sp", "tp")
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE: standard, partial-rotary, M-RoPE (qwen2-vl).
+# ---------------------------------------------------------------------------
+
+
+def _rope_cos_sin(positions, rot_dim: int, theta: float, dtype):
+    """positions: (..., S) int -> cos/sin (..., S, rot_dim/2)."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def _rotate(x, cos, sin):
+    """x: (B, S, H, rot_dim); cos/sin: (B, S, half) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(cfg, q, k, positions):
+    """q: (B,S,H,hd); k: (B,S,KV,hd); positions: (B,S) or (3,B,S) for M-RoPE."""
+    if cfg.rope_theta == 0.0:
+        return q, k  # learned-absolute-position archs (whisper)
+    hd = cfg.head_dim
+    rot = int(hd * cfg.partial_rotary)
+    rot -= rot % 2
+    if cfg.mrope_sections:
+        cos, sin = _mrope_cos_sin(cfg, positions, rot, q.dtype)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        cos, sin = _rope_cos_sin(positions, rot, cfg.rope_theta, q.dtype)
+
+    def rope_one(x):
+        if rot == hd:
+            return _rotate(x, cos, sin)
+        xr = _rotate(x[..., :rot], cos, sin)
+        return jnp.concatenate([xr, x[..., rot:]], axis=-1)
+
+    return rope_one(q), rope_one(k)
+
+
+def _mrope_cos_sin(cfg, positions, rot_dim: int, dtype):
+    """M-RoPE: positions (3, B, S) = (t, h, w) streams; frequency f uses the
+    stream its section assigns (sections are half-dim counts summing to
+    rot_dim//2).  For pure-text positions all three streams coincide and
+    M-RoPE reduces to standard RoPE.
+    """
+    if positions.ndim == 2:
+        positions = jnp.broadcast_to(positions[None],
+                                     (3,) + positions.shape)
+    half = rot_dim // 2
+    freqs = 1.0 / (cfg.rope_theta
+                   ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (3, B, S, half)
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32)
+        for i, s in enumerate(cfg.mrope_sections)])  # (half,)
+    sel = jax.nn.one_hot(sec, 3, dtype=ang.dtype)  # (half, 3)
+    ang = jnp.einsum("kbsf,fk->bsf", ang, sel)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)

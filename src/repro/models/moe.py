@@ -1,0 +1,244 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+train_sp: tokens are sequence-sharded over "model" and experts are sharded
+over "model" (EP).  Dispatch is sort-based (stable argsort by expert id,
+rank-within-expert via searchsorted, static capacity buffers) followed by a
+``lax.all_to_all`` to the expert owners and the inverse a2a back — the
+collective pattern real EP systems use (no dense one-hot dispatch einsums,
+which would dominate HLO FLOPs).
+
+decode_tp: tokens are replicated over "model"; each shard runs its local
+experts densely over the (few) decode tokens, masked by routing weights, and
+psums the combined output.
+
+Aux (load-balance) loss is returned alongside the output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import layers as L
+
+
+def moe_init(cfg, key, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+
+    def bank(k, din, dout, scale):
+        return (jax.random.normal(k, (e, din, dout), dtype=jnp.float32)
+                * scale).astype(dtype)
+
+    p = {
+        "router": L.dense_init(ks[0], d, e, dtype, scale=scale_in),
+        "experts": {
+            "w_gate": bank(ks[1], d, f, scale_in),
+            "w_up": bank(ks[2], d, f, scale_in),
+            "w_down": bank(ks[3], f, d, scale_out),
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": L.dense_init(kk[0], d, fs, dtype),
+            "w_up": L.dense_init(kk[1], d, fs, dtype),
+            "w_down": L.dense_init(kk[2], fs, d, dtype),
+        }
+    return p
+
+
+def _expert_ffn(bank, x):
+    """bank leaves: (E_local, D, F)/(E_local, F, D); x: (E_local, T, D)."""
+    h = jax.nn.silu(jnp.einsum("etd,edf->etf", x, bank["w_gate"]))
+    h = h * jnp.einsum("etd,edf->etf", x, bank["w_up"])
+    return jnp.einsum("etf,efd->etd", h, bank["w_down"])
+
+
+def _route(cfg, router_w, x):
+    """x: (..., D) -> (topk_w, topk_i, f_e, p_e).
+
+    f_e = fraction of routed slots on expert e; p_e = mean router prob.
+    The load-balance aux is E * sum_e f_e * p_e — when tokens are sharded,
+    f_e/p_e must be pmean'd across shards *before* the product so the loss
+    matches the unsharded computation exactly.
+    """
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_i = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_scale:
+        topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)
+    e = cfg.n_experts
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topk_i, e, dtype=jnp.float32), axis=-2),
+        axis=tuple(range(topk_i.ndim - 1))) / cfg.top_k
+    p_e = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return topk_w, topk_i, f_e, p_e
+
+
+def _aux(cfg, f_e, p_e):
+    return cfg.n_experts * jnp.sum(f_e * p_e)
+
+
+def _dispatch_compute_combine(cfg, x_flat, topk_w, topk_i, bank,
+                              tp: int, tp_idx, capacity: int):
+    """Sort-based dispatch on one shard's tokens.
+
+    x_flat: (N, D); topk_*: (N, k); bank leaves are the LOCAL expert slices
+    (E_local, ...).  tp == 1 means no a2a (all experts local).
+    """
+    N, D = x_flat.shape
+    k = cfg.top_k
+    e_local = cfg.n_experts // tp
+    C = capacity
+    flat_e = topk_i.reshape(-1)
+    flat_w = topk_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    rank = jnp.arange(N * k, dtype=jnp.int32) - jnp.searchsorted(
+        se, se, side="left").astype(jnp.int32)
+    keep = rank < C
+    dest = se // e_local                     # owning shard
+    slot = (se % e_local) * C + rank         # slot within that shard's buffer
+    tok = flat_t[order]
+    w_sorted = flat_w[order]
+
+    send = jnp.zeros((tp, e_local * C, D), x_flat.dtype)
+    send = send.at[dest, jnp.where(keep, slot, 0)].add(
+        x_flat[tok] * keep[:, None].astype(x_flat.dtype), mode="drop")
+
+    if tp > 1:
+        recv = jax.lax.all_to_all(send, shd.layout().model_axis,
+                                  split_axis=0, concat_axis=0)
+    else:
+        recv = send
+    # (tp, E_local, C, D) -> (E_local, tp*C, D)
+    grouped = recv.reshape(tp, e_local, C, D).transpose(1, 0, 2, 3)
+    grouped = grouped.reshape(e_local, tp * C, D)
+    out = _expert_ffn(bank, grouped)
+    out = out.reshape(e_local, tp, C, D).transpose(1, 0, 2, 3)
+    out = out.reshape(tp, e_local * C, D)
+    if tp > 1:
+        out = jax.lax.all_to_all(out, shd.layout().model_axis,
+                                 split_axis=0, concat_axis=0)
+    gathered = out[dest, slot]               # (N*k, D) in sorted space
+    contrib = gathered * (w_sorted * keep).astype(x_flat.dtype)[:, None]
+    y = jnp.zeros((N, D), x_flat.dtype).at[tok].add(contrib)
+    return y
+
+
+def capacity_for(cfg, n_tokens: int, factor: Optional[float] = None) -> int:
+    from repro.perf.knobs import knobs
+    if factor is None and knobs().moe_capacity_factor > 0:
+        factor = knobs().moe_capacity_factor
+    factor = factor if factor is not None else cfg.moe_capacity_factor
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_apply(cfg, params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) (seq-sharded under train_sp; replicated S=1 in decode).
+
+    Returns (y, aux_loss).
+    """
+    lay = shd.layout()
+    B, S, D = x.shape
+
+    if lay.mesh is not None and lay.mode == "decode_tp" and lay.model_axis:
+        return _moe_decode(cfg, params, x)
+
+    sharded = (lay.mesh is not None and lay.mode == "train_sp"
+               and lay.model_axis is not None)
+    if not sharded:
+        topk_w, topk_i, f_e, p_e = _route(cfg, params["router"], x)
+        aux = _aux(cfg, f_e, p_e)
+        C = capacity_for(cfg, B * S)
+        y = _dispatch_compute_combine(
+            cfg, x.reshape(-1, D), topk_w.reshape(-1, cfg.top_k),
+            topk_i.reshape(-1, cfg.top_k), params["experts"], 1,
+            jnp.int32(0), C)
+        y = y.reshape(B, S, D)
+    else:
+        m_ax = lay.model_axis
+        dp = lay.dp if lay.dp else None
+        tp = lay.n_shards
+        S_local = S // tp
+        B_local = B // max(lay.dp_size, 1)
+        C = capacity_for(cfg, B_local * S_local)
+
+        def body(x_l, router_w, bank):
+            tpi = jax.lax.axis_index(m_ax)
+            topk_w, topk_i, f_e, p_e = _route(cfg, router_w, x_l)
+            y = _dispatch_compute_combine(
+                cfg, x_l.reshape(-1, D), topk_w.reshape(-1, cfg.top_k),
+                topk_i.reshape(-1, cfg.top_k), bank, tp, tpi, C)
+            axes = tuple(lay.dp) + (m_ax,)
+            aux = _aux(cfg, jax.lax.pmean(f_e, axes),
+                       jax.lax.pmean(p_e, axes))
+            return y.reshape(x_l.shape), aux
+
+        y, aux = jax.shard_map(
+            body, mesh=lay.mesh,
+            in_specs=(P(dp, m_ax), P(), P(m_ax)),
+            out_specs=(P(dp, m_ax), P()),
+        )(x, params["router"], params["experts"])
+
+    if cfg.n_shared_experts:
+        sp = shd.use_weight(params["shared"])
+        h = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+    return y, aux
+
+
+def _moe_decode(cfg, params, x):
+    """Decode path: tokens replicated, local experts densely masked + psum."""
+    lay = shd.layout()
+    m_ax = lay.model_axis
+    B, S, D = x.shape
+    dp = lay.dp_for(B)
+    tp = lay.n_shards
+    e_local = cfg.n_experts // tp
+
+    def body(x_l, router_w, bank):
+        tpi = jax.lax.axis_index(m_ax)
+        xf = x_l.reshape(-1, D)                       # (T, D)
+        topk_w, topk_i, f_e, p_e = _route(cfg, router_w, xf)
+        w_dense = jnp.zeros((xf.shape[0], cfg.n_experts), jnp.float32)
+        w_dense = w_dense.at[
+            jnp.arange(xf.shape[0])[:, None], topk_i].set(topk_w)
+        lo = tpi * e_local
+        w_local = jax.lax.dynamic_slice_in_dim(w_dense, lo, e_local, axis=1)
+        xt = jnp.broadcast_to(xf[None], (e_local,) + xf.shape)
+        ye = _expert_ffn(bank, xt)                    # (E_local, T, D)
+        y = jnp.einsum("te,etd->td", w_local.astype(x_l.dtype), ye)
+        y = jax.lax.psum(y, m_ax)
+        # tokens are replicated over "model" here, so f_e/p_e only vary
+        # over the dp axes (if the batch is dp-sharded at all)
+        if dp:
+            f_m = jax.lax.pmean(f_e, tuple(dp))
+            p_m = jax.lax.pmean(p_e, tuple(dp))
+        else:
+            f_m, p_m = f_e, p_e
+        aux = _aux(cfg, f_m, p_m)
+        return y.reshape(x_l.shape), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=lay.mesh,
+        in_specs=(P(dp), P(), P(m_ax)),
+        out_specs=(P(dp), P()),
+    )(x, params["router"], params["experts"])
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        h = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+    return y, aux

@@ -1,0 +1,333 @@
+"""SSM cores: chunked linear recurrences (mLSTM / Mamba-SSD) and sLSTM.
+
+The shared machinery is a *stabilized linear recurrence over chunk states*
+
+    S_t = exp(g_t) * S_{t-1} + exp(i_t) * k_t v_t^T
+
+computed in chunkwise-parallel form: quadratic (attention-like) math inside a
+chunk, a tiny sequential scan over chunk states, and — when the sequence is
+sharded over the "model" axis (train_sp layout) — a distributed exclusive
+prefix across shards (all_gather of per-shard summaries + log-depth local
+combine).  This is the TPU-native adaptation of GPU selective-scan kernels:
+chunk-local matmuls feed the MXU, and only (h, dq, dv) chunk states cross
+chunk/shard boundaries.
+
+Hardware-adaptation note (DESIGN.md §4): Hymba's Mamba heads use per-*head*
+scalar decay (Mamba-2/SSD form) rather than per-channel (Mamba-1) so the
+intra-chunk math is head-wise matmuls.  mLSTM follows the xLSTM chunkwise
+formulation with max-stabilizers and the |den| >= exp(-m) normalizer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+NEG = -1e30
+
+
+class ScanState(NamedTuple):
+    """Stabilized recurrence state: true_C = C * exp(m); loga = log of the
+    total decay this state spans (identity: loga=0, m=NEG, C=n=0)."""
+    loga: jnp.ndarray  # (..., h)
+    m: jnp.ndarray     # (..., h)
+    C: jnp.ndarray     # (..., h, dq, dv)
+    n: jnp.ndarray     # (..., h, dq)
+
+
+def _bc(s, x):
+    return s.reshape(s.shape + (1,) * (x.ndim - s.ndim))
+
+
+def state_identity(shape_hint: ScanState) -> ScanState:
+    return ScanState(
+        loga=jnp.zeros_like(shape_hint.loga),
+        m=jnp.full_like(shape_hint.m, NEG),
+        C=jnp.zeros_like(shape_hint.C),
+        n=jnp.zeros_like(shape_hint.n))
+
+
+def combine(s1: ScanState, s2: ScanState) -> ScanState:
+    """Associative combine: apply s1's span, then s2's."""
+    loga = s1.loga + s2.loga
+    m = jnp.maximum(s1.m + s2.loga, s2.m)
+    a1 = jnp.exp(s1.m + s2.loga - m)
+    a2 = jnp.exp(s2.m - m)
+    return ScanState(
+        loga=loga, m=m,
+        C=s1.C * _bc(a1, s1.C) + s2.C * _bc(a2, s2.C),
+        n=s1.n * _bc(a1, s1.n) + s2.n * _bc(a2, s2.n))
+
+
+# ---------------------------------------------------------------------------
+# Chunk elements / outputs.
+# ---------------------------------------------------------------------------
+
+
+def _chunk_states(k, v, g, i) -> ScanState:
+    """Per-chunk recurrence elements.
+
+    k: (B, nc, c, h, dq); v: (B, nc, c, h, dv); g/i: (B, nc, c, h).
+    """
+    lg = jnp.cumsum(g, axis=2)
+    tot = lg[:, :, -1]                        # (B, nc, h)
+    w = tot[:, :, None] - lg + i              # carry-to-chunk-end log weight
+    m_loc = jnp.max(w, axis=2)                # (B, nc, h)
+    sc = jnp.exp(w - m_loc[:, :, None])
+    C = jnp.einsum("bnch,bnchq,bnchv->bnhqv", sc, k, v)
+    n = jnp.einsum("bnch,bnchq->bnhq", sc, k)
+    return ScanState(loga=tot, m=m_loc, C=C, n=n)
+
+
+def _chunk_outputs(q, k, v, g, i, ent: ScanState, *, normalize: bool,
+                   scale: float):
+    """Outputs for every position given the entering state of each chunk."""
+    lg = jnp.cumsum(g, axis=2)                           # (B,nc,c,h)
+    # intra-chunk log decay matrix D[t,s] = lg_t - lg_s + i_s (s <= t)
+    D = (lg[:, :, :, None, :] - lg[:, :, None, :, :]
+         + i[:, :, None, :, :])                          # (B,nc,t,s,h)
+    c = q.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(tri[None, None, :, :, None], D, NEG)
+    m_intra = jnp.max(D, axis=3)                         # (B,nc,t,h)
+    lg_e = lg + ent.m[:, :, None, :]                     # inter log scale
+    m_out = jnp.maximum(lg_e, m_intra)
+    W = jnp.exp(D - m_out[:, :, :, None, :])             # (B,nc,t,s,h)
+    dot = jnp.einsum("bnthq,bnshq->bntsh",
+                     q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    WS = W * dot
+    num = jnp.einsum("bntsh,bnshv->bnthv", WS, v.astype(jnp.float32))
+    den = jnp.sum(WS, axis=3)                            # (B,nc,t,h)
+    sc_e = jnp.exp(lg_e - m_out)                         # (B,nc,t,h)
+    qC = jnp.einsum("bnthq,bnhqv->bnthv",
+                    q.astype(jnp.float32), ent.C) * scale
+    qn = jnp.einsum("bnthq,bnhq->bnth",
+                    q.astype(jnp.float32), ent.n) * scale
+    num = num + sc_e[..., None] * qC
+    den = den + sc_e * qn
+    if normalize:
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_out))
+        return num / den[..., None]
+    return num
+
+
+def _local_scan(elems: ScanState):
+    """Sequential scan over the chunk dim; returns (entering, final)."""
+    ident = jax.tree.map(lambda t: t[:, 0], state_identity(elems))
+
+    def step(carry, e):
+        return combine(carry, e), carry
+
+    el = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), elems)
+    if shd.unrolled():
+        nc = jax.tree.leaves(el)[0].shape[0]
+        carry, outs = ident, []
+        for i in range(nc):
+            carry, prev = step(carry, jax.tree.map(lambda t: t[i], el))
+            outs.append(prev)
+        entering = jax.tree.map(lambda *ts: jnp.stack(ts, 0), *outs)
+        final = carry
+    else:
+        final, entering = jax.lax.scan(step, ident, ScanState(*el))
+    entering = jax.tree.map(lambda t: jnp.moveaxis(t, 0, 1), entering)
+    return ScanState(*entering), final
+
+
+def linear_recurrence(q, k, v, g, i, *, chunk: int = 128,
+                      normalize: bool, scale: Optional[float] = None,
+                      init_state: Optional[ScanState] = None):
+    """Chunked linear recurrence over (B, S, h, d*) inputs.
+
+    Returns (y (B,S,h,dv) fp32, final_state).  Sequence-sharding over the
+    "model" axis is handled with a distributed exclusive prefix.
+    """
+    B, S, h, dq = q.shape
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dq)
+    lay = shd.layout()
+    sharded = (lay.mesh is not None and lay.mode == "train_sp"
+               and lay.model_axis is not None)
+
+    def run_local(q, k, v, g, i, tp_idx, n_tp):
+        B_l, S_l = q.shape[0], q.shape[1]
+        c = chunk if S_l % chunk == 0 and S_l > chunk else S_l
+        nc = S_l // c
+        rs = lambda t, d: t.reshape(B_l, nc, c, h, d)
+        qc, kc, vc = rs(q, dq), rs(k, dq), rs(v, dv)
+        gc = g.reshape(B_l, nc, c, h).astype(jnp.float32)
+        ic = i.reshape(B_l, nc, c, h).astype(jnp.float32)
+        elems = _chunk_states(kc.astype(jnp.float32), vc.astype(jnp.float32),
+                              gc, ic)
+        entering, final = _local_scan(elems)
+        if n_tp > 1:
+            gathered = jax.tree.map(
+                lambda t: jax.lax.all_gather(t, lay.model_axis), final)
+            prefix = jax.tree.map(lambda t: t[0],
+                                  state_identity(ScanState(*gathered)))
+            for s in range(n_tp - 1):
+                cand = combine(prefix, jax.tree.map(lambda t: t[s], gathered))
+                take = s < tp_idx
+                prefix = jax.tree.map(
+                    lambda a, b: jnp.where(take, b, a), prefix, cand)
+            entering = combine(
+                jax.tree.map(lambda t: t[:, None], prefix), entering)
+            final = combine(prefix, final)
+            # replicate the global final across shards
+            is_last = (tp_idx == n_tp - 1).astype(jnp.float32)
+            final = jax.tree.map(
+                lambda t: jax.lax.psum(t * is_last, lay.model_axis), final)
+        if init_state is not None:
+            entering = combine(
+                jax.tree.map(lambda t: t[:, None], init_state), entering)
+            final = combine(init_state, final)
+        y = _chunk_outputs(qc, kc, vc, gc, ic, entering,
+                           normalize=normalize, scale=scale)
+        return y.reshape(B_l, S_l, h, dv), final
+
+    if not sharded:
+        return run_local(q, k, v, g, i, jnp.int32(0), 1)
+
+    m_ax = lay.model_axis
+    dp = lay.dp if lay.dp else None
+    n_tp = lay.n_shards
+
+    def body(q, k, v, g, i):
+        idx = jax.lax.axis_index(m_ax)
+        return run_local(q, k, v, g, i, idx, n_tp)
+
+    return jax.shard_map(
+        body, mesh=lay.mesh,
+        in_specs=(P(dp, m_ax), P(dp, m_ax), P(dp, m_ax), P(dp, m_ax),
+                  P(dp, m_ax)),
+        out_specs=(P(dp, m_ax), P(dp)),
+    )(q, k, v, g, i)
+
+
+def recurrence_step(state: ScanState, q, k, v, g, i, *, normalize: bool,
+                    scale: Optional[float] = None):
+    """Single-token decode update.  q/k: (B,h,dq); v: (B,h,dv); g/i: (B,h)."""
+    dq = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dq)
+    elem = ScanState(
+        loga=g.astype(jnp.float32), m=i.astype(jnp.float32),
+        C=jnp.einsum("bhq,bhv->bhqv", k.astype(jnp.float32),
+                     v.astype(jnp.float32)),
+        n=k.astype(jnp.float32))
+    new = combine(state, elem)
+    num = jnp.einsum("bhq,bhqv->bhv", q.astype(jnp.float32), new.C) * scale
+    if normalize:
+        den = jnp.einsum("bhq,bhq->bh", q.astype(jnp.float32), new.n) * scale
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-new.m))
+        return num / den[..., None], new
+    return num, new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (with cross-shard halo under train_sp).
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b=None, *, init_state=None):
+    """x: (B, S, C); w: (cw, C) depthwise; left-pads with zeros (or
+    ``init_state`` (B, cw-1, C) during decode/chunked prefill)."""
+    cw = w.shape[0]
+    lay = shd.layout()
+    sharded = (lay.mesh is not None and lay.mode == "train_sp"
+               and lay.model_axis is not None)
+
+    def conv_local(x_l, left):
+        xp = jnp.concatenate([left, x_l], axis=1)
+        y = sum(xp[:, j:j + x_l.shape[1]] * w[j] for j in range(cw))
+        return y + (b if b is not None else 0.0)
+
+    if not sharded:
+        left = (init_state if init_state is not None
+                else jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype))
+        return conv_local(x, left)
+
+    m_ax = lay.model_axis
+    dp = lay.dp if lay.dp else None
+    n_tp = lay.n_shards
+
+    def body(x_l):
+        idx = jax.lax.axis_index(m_ax)
+        tail = x_l[:, -(cw - 1):]
+        left = jax.lax.ppermute(
+            tail, m_ax, [(s, s + 1) for s in range(n_tp - 1)])
+        left = jnp.where(idx == 0, jnp.zeros_like(left), left)
+        return conv_local(x_l, left)
+
+    return jax.shard_map(body, mesh=lay.mesh, in_specs=P(dp, m_ax),
+                         out_specs=P(dp, m_ax))(x)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (strictly sequential; xLSTM scalar-memory cell).
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d: int, n_heads: int, dtype):
+    hd = d // n_heads
+    ks = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(d)
+    w = (jax.random.normal(ks[0], (d, 4 * d), dtype=jnp.float32)
+         * scale).astype(dtype)
+    r = (jax.random.normal(ks[1], (4, n_heads, hd, hd), dtype=jnp.float32)
+         * (1.0 / math.sqrt(hd))).astype(dtype)
+    bias = jnp.zeros((4 * d,), dtype)
+    return {"w": w, "r": r, "bias": bias}
+
+
+def slstm_apply(params, x, n_heads: int, *, init_state=None):
+    """x: (B, S, D).  Returns (h (B,S,D), final_state).
+
+    Under train_sp the sequence is gathered (sLSTM is non-associative), the
+    scan runs replicated, and each shard keeps its local slice — documented
+    replicated compute for the 1-in-8 sLSTM blocks of xlstm.
+    """
+    B, S, D = x.shape
+    hd = D // n_heads
+    p = shd.use_weight(params)
+    pre = x @ p["w"] + p["bias"]                      # (B,S,4D)
+    lay = shd.layout()
+    sharded = (lay.mesh is not None and lay.mode == "train_sp"
+               and lay.model_axis is not None)
+    if sharded:
+        pre = shd.act(pre, "dp", None, None)          # gather sequence
+
+    def scan_full(pre_full, state0):
+        def step(carry, z_t):
+            c, n, h, m = carry
+            zi, zf, zz, zo = jnp.split(
+                z_t + jnp.einsum("bkh,gkhj->bgkj", h, p["r"].astype(
+                    jnp.float32)).reshape(z_t.shape[0], -1), 4, axis=-1)
+            rs = lambda t: t.reshape(t.shape[0], n_heads, hd)
+            zi, zf, zz, zo = rs(zi), rs(zf), rs(zz), rs(zo)
+            logf = jax.nn.log_sigmoid(zf)
+            m_new = jnp.maximum(logf + m, zi)
+            fp = jnp.exp(logf + m - m_new)
+            ip = jnp.exp(zi - m_new)
+            c_new = fp * c + ip * jnp.tanh(zz)
+            n_new = fp * n + ip
+            h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+            return (c_new, n_new, h_new, m_new), h_new
+
+        if state0 is None:
+            z = jnp.zeros((pre_full.shape[0], n_heads, hd), jnp.float32)
+            state0 = (z, z, z, jnp.full((pre_full.shape[0], n_heads, hd),
+                                        NEG, jnp.float32))
+        final, hs = jax.lax.scan(step, state0,
+                                 jnp.moveaxis(pre_full, 1, 0).astype(
+                                     jnp.float32))
+        hs = jnp.moveaxis(hs, 0, 1).reshape(pre_full.shape[0], -1, D)
+        return hs.astype(x.dtype), final
+
+    h_full, final = scan_full(pre, init_state)
+    if sharded:
+        h_full = shd.act(h_full, "dp", "sp", None)    # back to local slice
+    return h_full, final

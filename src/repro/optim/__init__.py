@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    Optimizer, adam, adamw, apply_updates, chain, clip_by_global_norm,
+    global_norm, momentum, sgd,
+)
+from repro.optim.schedules import constant, cosine_schedule, linear_warmup
+from repro.optim.compression import (
+    compress_int8, decompress_int8, error_feedback_compress,
+)
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "apply_updates", "chain",
+    "clip_by_global_norm", "global_norm", "momentum", "sgd",
+    "constant", "cosine_schedule", "linear_warmup",
+    "compress_int8", "decompress_int8", "error_feedback_compress",
+]

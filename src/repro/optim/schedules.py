@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(v: float):
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def linear_warmup(base: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return base * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(base: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return warm * jnp.where(s < warmup_steps, 1.0, cos)
+    return fn

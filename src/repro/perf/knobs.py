@@ -1,0 +1,42 @@
+"""Performance knobs — the §Perf hillclimb levers.
+
+Set per-experiment (dry-run CLI / hillclimb harness) via a contextvar so
+model code stays clean.  Every knob defaults to the paper-faithful baseline.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class Knobs:
+    q_chunk: int = 256          # attention q-chunk rows
+    window_slice: bool = True   # slice KV span for sliding-window layers
+    ce_impl: str = "dense"      # dense | ring  (vocab-ring fused CE)
+    ce_chunk: int = 0           # >0: vocab chunking within the ring step
+    fsdp_gather: str = "wsc"    # wsc | shardmap (all_gather w/ reduce-
+                                # scatter AD transpose; dim0-only sharding)
+    moe_capacity_factor: float = 0.0  # >0 overrides the config value
+    remat: bool = True
+    attn_scores_bf16: bool = False  # softmax chain in bf16 (inference)
+    attn_halo: bool = False   # sliding-window layers exchange KV halos via
+                              # ppermute instead of all-gathering full seq
+
+
+_current: contextvars.ContextVar[Knobs] = contextvars.ContextVar(
+    "repro_knobs", default=Knobs())
+
+
+def knobs() -> Knobs:
+    return _current.get()
+
+
+@contextlib.contextmanager
+def use_knobs(**kw):
+    tok = _current.set(replace(_current.get(), **kw))
+    try:
+        yield _current.get()
+    finally:
+        _current.reset(tok)

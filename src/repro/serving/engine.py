@@ -1,0 +1,69 @@
+"""Minimal batched serving engine: prefill + greedy/temperature decode.
+
+Used by examples/serve_decode.py and the decode-shape smoke tests.  The
+production mesh path reuses the same decode_step the dry-run lowers
+(feature-TP + sequence-sharded KV); on CPU it runs the local layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclass
+class ServeEngine:
+    cfg: object
+    params: object
+    max_len: int = 512
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        def _prefill(params, batch):
+            return M.prefill(cfg, params, batch)
+
+        def _decode(params, tokens, pos, caches):
+            return M.decode_step(cfg, params, tokens, pos, caches)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def generate(self, tokens: np.ndarray, n_new: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+        """tokens: (B, S) prompt -> (B, n_new) generated ids."""
+        B, S = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S))}
+        if self.cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (3, B, S))
+        if self.cfg.is_encoder_decoder:
+            batch["frames"] = (jnp.asarray(frames) if frames is not None
+                               else jnp.zeros(
+                (B, self.cfg.encoder_seq_len, self.cfg.d_model)))
+        last_logits, caches = self._prefill(self.params, batch)
+        caches = M.pad_caches(caches, S + n_new)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        nxt = self._sample(last_logits, temperature, key)
+        for t in range(n_new):
+            out.append(np.asarray(nxt))
+            logits, caches = self._decode(self.params, nxt[:, None],
+                                          jnp.int32(S + t), caches)
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits[:, 0], temperature, sub)
+        return np.stack(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)

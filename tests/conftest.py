@@ -1,0 +1,39 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device; the
+multi-device sharding test spawns its own subprocess (see
+test_sharded_equivalence.py)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import all_archs, get_config
+
+
+@pytest.fixture(scope="session", params=sorted(all_archs()))
+def arch_name(request):
+    return request.param
+
+
+def reduced_cfg(name, drop_free_moe=True):
+    cfg = get_config(name).reduced()
+    if drop_free_moe and cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.n_experts))
+    return cfg
+
+
+def tiny_batch(cfg, key, B=2, S=16, labels=True):
+    import jax.numpy as jnp
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+    }
+    if labels:
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jnp.zeros((B, S, cfg.d_model))
+        batch["image_mask"] = jnp.zeros((B, S), bool)
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq_len, cfg.d_model)) * 0.01
+    return batch

@@ -1,0 +1,176 @@
+"""The paper's core machinery: order stats, Elfving, censoring, controller,
+DMM+guide ELBO, and the cutoff aggregation semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.simulator import ClusterSim, paper_cluster_158
+from repro.core.controller import (CutoffController, ElfvingController,
+                                   FullSyncController,
+                                   StaticCutoffController)
+from repro.core.cutoff import censoring, elfving, order_stats
+from repro.core.runtime_model.api import RuntimeModel
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Elfving / order statistics (paper §3.1.1, §4.1)
+# ---------------------------------------------------------------------------
+
+
+def test_elfving_reproduces_paper_numbers():
+    """Paper §4.1: n=158, mu=1.057, sigma=0.393 -> E[max] ~ 2.1063 s."""
+    approx = elfving.expected_max(158, 1.057, 0.393)
+    exact = elfving.exact_order_stat_mean(158, 158, 1.057, 0.393)
+    # paper prints 2.1063; MC ground truth is 2.1055 +- 0.001
+    assert abs(approx - 2.1063) < 3e-3
+    assert abs(exact - 2.1055) < 1.5e-3
+    # ~1 second of idle per worker (paper: 1.049)
+    assert abs((approx - 1.057) - 1.049) < 3e-3
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 500), mu=st.floats(0.5, 5.0),
+       sigma=st.floats(0.01, 1.0))
+def test_elfving_order_stats_monotone(n, mu, sigma):
+    e = elfving.expected_order_stats(n, mu, sigma)
+    assert np.all(np.diff(e) >= -1e-12)          # sorted expectations
+    # symmetry: the two middle order stats straddle mu
+    mid = 0.5 * (e[(n - 1) // 2] + e[n // 2])
+    assert abs(mid - mu) < 0.1 * sigma + 1e-6
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(8, 256), seed=st.integers(0, 1000))
+def test_mc_order_stats_match_sorted_means(n, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.exponential(1.0, size=(64, n))
+    mean, std = order_stats.mc_order_stats(s)
+    assert np.all(np.diff(mean) >= -1e-12)
+    assert std.shape == (n,)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000))
+def test_optimal_cutoff_beats_full_sync_throughput(seed):
+    rng = np.random.default_rng(seed)
+    s = rng.lognormal(0.0, 0.4, size=(128, 64))
+    c = order_stats.optimal_cutoff(s)
+    omega = order_stats.throughput_curve(s)
+    assert omega[c - 1] >= omega[-1] - 1e-9
+
+
+def test_oracle_cutoff_definition():
+    t = np.array([1.0, 1.1, 1.2, 9.0])
+    assert order_stats.oracle_cutoff(t) == 3
+    assert order_stats.iter_time(t, 3) == pytest.approx(1.2)
+
+
+# ---------------------------------------------------------------------------
+# Censored imputation (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), cut=st.floats(0.5, 3.0))
+def test_truncated_samples_respect_lower_bound(seed, cut):
+    rng = np.random.default_rng(seed)
+    s = censoring.truncated_normal_sample(
+        np.zeros(200), np.ones(200), np.full(200, cut), rng)
+    assert np.all(s >= cut - 1e-9)
+
+
+def test_truncated_mean_matches_theory():
+    rng = np.random.default_rng(0)
+    s = censoring.truncated_normal_sample(
+        np.zeros(200_000), np.ones(200_000), np.ones(200_000), rng)
+    # E[X | X>1] for standard normal = phi(1)/(1-Phi(1)) ~ 1.5251
+    assert abs(s.mean() - 1.5251) < 0.01
+
+
+def test_impute_censored_only_touches_missing():
+    rng = np.random.default_rng(1)
+    obs = np.array([1.0, 2.0, 0.0, 0.0])
+    mask = np.array([True, True, False, False])
+    out = censoring.impute_censored(obs, mask, np.full(4, 1.5),
+                                    np.full(4, 0.3), 2.0, rng)
+    assert out[0] == 1.0 and out[1] == 2.0
+    assert np.all(out[2:] >= 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Controllers
+# ---------------------------------------------------------------------------
+
+
+def test_static_and_sync_controllers():
+    assert FullSyncController(64).predict_cutoff() == 64
+    assert StaticCutoffController(100, drop_frac=0.06).predict_cutoff() == 94
+    assert StaticCutoffController(64, cutoff=60).predict_cutoff() == 60
+
+
+def test_elfving_controller_warms_up_then_cuts():
+    ctl = ElfvingController(64, warmup=3)
+    rng = np.random.default_rng(0)
+    assert ctl.predict_cutoff() == 64
+    for _ in range(5):
+        ctl.observe(rng.normal(1.0, 0.2, 64))
+    c = ctl.predict_cutoff()
+    assert 32 <= c < 64
+
+
+def test_cutoff_controller_end_to_end_beats_sync():
+    sim = paper_cluster_158(seed=0)
+    trace = sim.run(120)
+    rm = RuntimeModel(n_workers=158, lag=20).init(0)
+    rm.fit(trace, steps=120, batch=8)
+    ctl = CutoffController(rm, k_samples=32)
+    ctl.seed_window(trace)
+
+    sim2 = paper_cluster_158(seed=3)
+    t_cut = t_sync = 0.0
+    grads_cut = grads_sync = 0
+    for _ in range(60):
+        times = sim2.step()
+        c = ctl.predict_cutoff()
+        it = order_stats.iter_time(times, c)
+        ctl.observe(times, times <= it + 1e-12)
+        t_cut += it
+        grads_cut += c
+        t_sync += times.max()
+        grads_sync += len(times)
+    assert grads_cut / t_cut > 1.15 * (grads_sync / t_sync)
+
+
+def test_controller_censoring_keeps_window_full():
+    sim = paper_cluster_158(seed=1)
+    trace = sim.run(60)
+    rm = RuntimeModel(n_workers=158, lag=20).init(0)
+    rm.fit(trace, steps=60, batch=8)
+    ctl = CutoffController(rm, k_samples=16)
+    ctl.seed_window(trace)
+    for _ in range(5):
+        times = sim.step()
+        c = ctl.predict_cutoff()
+        it = order_stats.iter_time(times, c)
+        ctl.observe(times, times <= it + 1e-12)
+    w = np.stack(ctl._window[-5:])
+    assert w.shape[1] == 158 and np.all(np.isfinite(w)) and np.all(w > 0)
+
+
+# ---------------------------------------------------------------------------
+# Runtime model (DMM + guide)
+# ---------------------------------------------------------------------------
+
+
+def test_elbo_improves_and_predicts():
+    sim = ClusterSim(n_workers=32, n_nodes=4, seed=0)
+    trace = sim.run(150)
+    rm = RuntimeModel(n_workers=32, lag=10).init(0)
+    losses = rm.fit(trace, steps=200, batch=8)
+    assert np.mean(losses[-20:]) < np.mean(losses[:20])
+    samples, mu, std = rm.predict_next(trace[-11:], k_samples=32)
+    assert samples.shape == (32, 32) and np.all(np.isfinite(samples))
+    # predictions land in a plausible runtime range
+    assert 0.0 < mu.mean() < 5.0 * trace.mean()

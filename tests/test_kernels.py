@@ -1,0 +1,191 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU) —
+fixed cases + hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_adam import fused_adam
+from repro.kernels.masked_grad_agg import masked_grad_agg
+from repro.kernels.mlstm_chunk import mlstm_chunk
+from repro.kernels import ops
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+def test_flash_attention_basic(causal, window):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    want = ref.reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]),
+    s=st.sampled_from([128, 256, 384]),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+    hd=st.sampled_from([32, 64, 128]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    causal=st.booleans(),
+)
+def test_flash_attention_sweep(b, s, heads, hd, dtype, causal):
+    H, KV = heads
+    key = jax.random.PRNGKey(hash((b, s, H, KV, hd, causal)) % 2**31)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, KV, hd)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=causal)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), atol=atol, rtol=0.05)
+
+
+def test_flash_matches_model_attention_core():
+    """The kernel contract equals the model stack's attn_core path."""
+    from repro.models.attention import attn_core
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    qpos = jnp.broadcast_to(jnp.arange(256)[None], (2, 256))
+    core = attn_core(q, k, v, qpos, jnp.arange(256), causal=True, window=0)
+    kern = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(core, kern, atol=3e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlstm chunk
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([128, 256]),
+    chunk=st.sampled_from([32, 64, 128]),
+    hd=st.sampled_from([16, 32, 64]),
+    h=st.sampled_from([1, 2]),
+)
+def test_mlstm_chunk_sweep(s, chunk, hd, h):
+    key = jax.random.PRNGKey(hash((s, chunk, hd, h)) % 2**31)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (2, s, h, hd)) * 0.5
+    k = jax.random.normal(ks[1], (2, s, h, hd)) * 0.5
+    v = jax.random.normal(ks[2], (2, s, h, hd))
+    g = jax.nn.log_sigmoid(jax.random.normal(ks[3], (2, s, h)) + 3.0)
+    i = jax.random.normal(ks[4], (2, s, h)) * 0.5
+    out = mlstm_chunk(q, k, v, g, i, chunk=chunk, interpret=True)
+    want = ref.reference_mlstm(q, k, v, g, i)
+    np.testing.assert_allclose(out, want, atol=5e-4, rtol=5e-4)
+
+
+def test_mlstm_kernel_matches_model_recurrence():
+    from repro.models import ssm as S
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32)) * 0.5
+    k = jax.random.normal(ks[1], (1, 128, 2, 32)) * 0.5
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    g = jax.nn.log_sigmoid(jax.random.normal(ks[3], (1, 128, 2)) + 3.0)
+    i = jax.random.normal(ks[4], (1, 128, 2)) * 0.5
+    kern = mlstm_chunk(q, k, v, g, i, chunk=64, interpret=True)
+    model, _ = S.linear_recurrence(q, k, v, g, i, chunk=64, normalize=True)
+    np.testing.assert_allclose(kern, model, atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused adam
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(8, 128), (16, 256), (8, 1024)]),
+    wd=st.sampled_from([0.0, 0.01]),
+    step=st.sampled_from([1, 100]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_fused_adam_sweep(shape, wd, step, dtype):
+    key = jax.random.PRNGKey(hash((shape, wd, step)) % 2**31)
+    ks = jax.random.split(key, 4)
+    p = jax.random.normal(ks[0], shape).astype(dtype)
+    g = jax.random.normal(ks[1], shape).astype(dtype)
+    m = jax.random.normal(ks[2], shape) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], shape)) * 0.01
+    sc = jnp.array([1e-3, 1 - 0.9 ** step, 1 - 0.999 ** step], jnp.float32)
+    po, mo, vo = fused_adam(p, g, m, v, sc, wd=wd, interpret=True)
+    pw, mw, vw = ref.reference_adam(p, g, m, v, sc, wd=wd)
+    np.testing.assert_allclose(mo, mw, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(vo, vw, atol=1e-6, rtol=1e-5)
+    np.testing.assert_allclose(po.astype(np.float32), pw.astype(np.float32),
+                               atol=2e-3 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_adam_tree_wrapper_matches_optim():
+    """ops.adam_update_tree (xla path) == repro.optim.adam update."""
+    from repro import optim
+    key = jax.random.PRNGKey(7)
+    params = {"a": jax.random.normal(key, (37,)),
+              "b": jax.random.normal(key, (5, 13))}
+    grads = jax.tree.map(lambda x: x * 0.1, params)
+    opt = optim.adam(1e-3)
+    state = opt.init(params)
+    ups, _ = opt.update(grads, state, params)
+    want = optim.apply_updates(params, ups)
+    m = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    got, _, _ = ops.adam_update_tree(params, grads, m, v,
+                                     jnp.int32(0), 1e-3)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(a, b.reshape(a.shape), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.sampled_from([4, 8, 16]),
+    n=st.sampled_from([128, 384, 1024]),
+    frac=st.floats(0.1, 1.0),
+)
+def test_masked_agg_sweep(w, n, frac):
+    key = jax.random.PRNGKey(hash((w, n, int(frac * 100))) % 2**31)
+    g = jax.random.normal(key, (w, n))
+    rng = np.random.default_rng(0)
+    mask = (rng.uniform(size=w) < frac).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    m = jnp.asarray(mask).reshape(w, 1)
+    out = masked_grad_agg(g, m, interpret=True)
+    want = ref.reference_masked_agg(g, m)
+    np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)
+
+
+def test_masked_agg_is_paper_update():
+    """sum(bit*g)/c == the paper's Alg.1 line 29 for included workers."""
+    g = jnp.arange(12.0).reshape(4, 3)
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0]).reshape(4, 1)
+    out = ops.masked_aggregate(g, mask[:, 0])
+    want = (g[0] + g[2]) / 2
+    np.testing.assert_allclose(out, want)

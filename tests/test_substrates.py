@@ -1,0 +1,174 @@
+"""Optim, data pipeline, checkpoint, compression, cluster sim."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import store
+from repro.cluster.simulator import ClusterSim, cray_xc40_2175, paper_cluster_158
+from repro.data.pipeline import SyntheticImages, SyntheticTokens
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+
+def test_adam_matches_closed_form():
+    params = {"w": jnp.array([1.0, -2.0])}
+    grads = {"w": jnp.array([0.5, 0.5])}
+    opt = optim.adam(0.1, b1=0.9, b2=0.999, eps=1e-8)
+    state = opt.init(params)
+    ups, state = opt.update(grads, state, params)
+    m = 0.1 * 0.5
+    v = 0.001 * 0.25
+    want = -0.1 * (m / 0.1) / (np.sqrt(v / 0.001) + 1e-8)
+    np.testing.assert_allclose(ups["w"], [want, want], rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    params = {"w": jnp.zeros(4)}
+    grads = {"w": jnp.full(4, 10.0)}
+    opt = optim.clip_by_global_norm(optim.sgd(1.0), 1.0)
+    state = opt.init(params)
+    ups, _ = opt.update(grads, state, params)
+    assert float(optim.global_norm(ups)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    sch = optim.cosine_schedule(1.0, 10, 100)
+    assert float(sch(jnp.int32(0))) < 0.2
+    assert float(sch(jnp.int32(10))) == pytest.approx(1.0, abs=0.1)
+    assert float(sch(jnp.int32(99))) < 0.2
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100))
+def test_error_feedback_unbiased_over_time(seed):
+    """With EF, the *cumulative* applied update converges to the cumulative
+    true gradient (residual stays bounded)."""
+    rng = np.random.default_rng(seed)
+    g_true = jnp.asarray(rng.normal(size=257) * 0.1)
+    res = None
+    applied = jnp.zeros(257)
+    for _ in range(20):
+        sent, res = optim.error_feedback_compress({"g": g_true},
+                                                  res)
+        applied = applied + sent["g"]
+        res = res
+    total_err = float(jnp.max(jnp.abs(applied - 20 * g_true)))
+    scale = float(jnp.max(jnp.abs(g_true)))
+    assert total_err <= scale / 127.0 * 1.5 + 1e-6  # residual bound, no drift
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100))
+def test_int8_roundtrip_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=1000))
+    q, s = optim.compress_int8(x)
+    back = optim.decompress_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_tokens_deterministic_and_with_replacement():
+    ds = SyntheticTokens(vocab_size=128, seq_len=16, global_batch=8, seed=0)
+    b1 = ds.batch(3)
+    b2 = ds.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # per-worker draws are independent of other workers (with replacement):
+    w0 = ds.batch(3, worker=0, n_workers=4)
+    w0_again = ds.batch(3, worker=0, n_workers=4)
+    np.testing.assert_array_equal(w0["tokens"], w0_again["tokens"])
+    w1 = ds.batch(3, worker=1, n_workers=4)
+    assert not np.array_equal(w0["tokens"], w1["tokens"])
+
+
+def test_tokens_learnable_structure():
+    ds = SyntheticTokens(vocab_size=64, seq_len=32, global_batch=16, seed=0)
+    b = ds.batch(0)
+    # successor structure: every (t, t+1) pair is in the transition table
+    ok = 0
+    for row_t, row_l in zip(b["tokens"], b["labels"]):
+        for a, b_ in zip(row_t, row_l):
+            ok += b_ in ds.succ[a]
+    assert ok == 16 * 32
+
+
+def test_images_shapes():
+    ds = SyntheticImages(seed=0)
+    x, y = ds.batch(0, 32)
+    assert x.shape == (32, 28, 28) and y.shape == (32,)
+    xv, yv = ds.valid_set()
+    assert xv.shape[0] == ds.n_valid
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"a": jnp.arange(6.0).reshape(2, 3),
+                        "nested": [{"b": jnp.ones(4)}]},
+             "meta": {"step": 7, "clock": 1.5}}
+    store.save(str(tmp_path), 7, state)
+    out = store.restore(str(tmp_path), state)
+    np.testing.assert_array_equal(out["params"]["a"], state["params"]["a"])
+    np.testing.assert_array_equal(out["params"]["nested"][0]["b"],
+                                  jnp.ones(4))
+    assert store.latest_step(str(tmp_path)) == 7
+
+
+def test_checkpoint_keep_n_and_atomic(tmp_path):
+    state = {"x": {"v": jnp.zeros(2)}}
+    for s in range(5):
+        store.save(str(tmp_path), s, state, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_0000000003", "step_0000000004"]
+    assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(str(tmp_path))
+    ck.save(1, {"x": {"v": jnp.arange(3.0)}})
+    ck.wait()
+    out = store.restore(str(tmp_path), {"x": {"v": jnp.zeros(3)}})
+    np.testing.assert_array_equal(out["x"]["v"], jnp.arange(3.0))
+
+
+# ---------------------------------------------------------------------------
+# cluster sim
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_sim_properties():
+    sim = paper_cluster_158(seed=0)
+    t = sim.run(100)
+    assert t.shape == (100, 158) and np.all(t > 0)
+    # node correlation: workers on the same node co-vary more
+    c_same = np.corrcoef(t[:, 0], t[:, 1])[0, 1]
+    c_diff = np.corrcoef(t[:, 0], t[:, 120])[0, 1]
+    assert c_same > c_diff - 0.2  # same node at least as correlated
+
+
+def test_cluster_sim_regimes_change_distribution():
+    sim = ClusterSim(n_workers=64, n_nodes=4, regime_stay=0.0, seed=0)
+    t = sim.run(200)
+    stds = t.std(axis=1)
+    assert stds.max() > 2.0 * stds.min()  # regime switching is visible
+
+
+def test_cray_preset_size():
+    assert cray_xc40_2175(0).n_workers == 2175
