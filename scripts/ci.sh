@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Minimal CI: the tier-1 suite on CPU (what the roadmap calls "tier-1
+# verify").  Runs from the repo root.
+#
+#   scripts/ci.sh            # full tier-1 suite
+#   scripts/ci.sh -m "not sharded"   # skip the multi-device subprocess tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"

@@ -1,0 +1,73 @@
+"""Gated JAX compatibility polyfills.
+
+The codebase is written against the current jax sharding API
+(``jax.shard_map``, ``jax.set_mesh``, ``jax.make_mesh(axis_types=...)``).
+Older jax releases (the 0.4.x line this container pins) expose the same
+machinery under different entry points; this module backfills the gap so
+the rest of the code can use the modern spellings unconditionally.  On a
+new-enough jax every branch below is a no-op re-export.
+
+Backfills:
+  * ``jax.shard_map``  <- ``jax.experimental.shard_map.shard_map`` (with
+    ``check_rep=False``: the old checker predates several collectives we
+    use inside shard_map bodies — all_to_all, ppermute chains).
+  * ``jax.set_mesh``   <- the ``Mesh`` context manager (activating the
+    mesh; shardings in this repo always name their mesh explicitly, so the
+    physical-mesh context is all callers need).
+  * ``AxisType``       <- a stand-in enum; pre-0.5 meshes are implicitly
+    "auto" so the value is only ever decorative there.
+  * ``make_mesh``      <- drops the ``axis_types`` kwarg on old jax.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:
+    class AxisType:  # minimal stand-in; old meshes are implicitly Auto
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(shape, axes, *, axis_types=None):
+    """``jax.make_mesh`` that tolerates old jax (no ``axis_types``)."""
+    shape, axes = tuple(shape), tuple(axes)
+    types = axis_types if axis_types is not None else (
+        (AxisType.Auto,) * len(axes))
+    try:
+        return jax.make_mesh(shape, axes, axis_types=types)
+    except TypeError:  # jax 0.4.x: positional-only (shape, axes)
+        return jax.make_mesh(shape, axes)
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _compat_shard_map(f, *, mesh, in_specs, out_specs, **kw):
+        kw.setdefault("check_rep", False)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = _compat_shard_map
+
+
+try:  # pallas TPU params were renamed TPUCompilerParams -> CompilerParams
+    import jax.experimental.pallas.tpu as _pltpu
+    if not hasattr(_pltpu, "CompilerParams") and hasattr(
+            _pltpu, "TPUCompilerParams"):
+        _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+except ImportError:  # pallas not available on this install
+    pass
+
+
+if not hasattr(jax, "set_mesh"):
+    @contextlib.contextmanager
+    def _compat_set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = _compat_set_mesh

@@ -27,7 +27,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
-from repro.core import aggregation
+from repro.dist import collectives
 from repro.dist import sharding as shd
 from repro.models import model as M
 
@@ -75,7 +75,7 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
     """Returns train_step(state, batch) -> (state, metrics).
 
     state = {"params", "opt", ["ef"]}.  batch["weights"] is the per-example
-    cutoff mask expanded by ``aggregation.example_weights``.
+    cutoff mask expanded by ``dist.collectives.example_weights``.
     """
     loss_fn = make_loss_fn(cfg, aux_coef)
 
@@ -264,7 +264,7 @@ class Trainer:
 
             batch = self.data.batch(self.step)
             batch = dict(batch)
-            batch["weights"] = aggregation.example_weights(
+            batch["weights"] = collectives.example_weights(
                 mask, batch["tokens"].shape[0])
             self.state, metrics = self.step_fn(self.state, batch)
             self.step += 1

@@ -1,7 +1,15 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device; the
-multi-device sharding test spawns its own subprocess (see
+multi-device sharding tests spawn their own subprocesses (see
 test_sharded_equivalence.py)."""
 import dataclasses
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # deterministic fallback, see tests/_hyposhim.py
+    import _hyposhim
+    sys.modules["hypothesis"] = _hyposhim
+    sys.modules["hypothesis.strategies"] = _hyposhim.strategies
 
 import jax
 import numpy as np

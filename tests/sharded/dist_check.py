@@ -1,0 +1,103 @@
+"""Multi-device checks for repro.dist: masked psum aggregation + layout
+sharding rules on a real (fake-8-device) mesh.  Prints FAIL on any
+violated property; driven by tests/test_sharded_equivalence.py."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import aggregation
+from repro.dist import collectives
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+
+failures = []
+
+
+def check(name, ok):
+    print(f"{name:48s} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(name)
+
+
+# ---------------------------------------------------------------------------
+# masked_psum_mean on an 8-worker DP mesh.
+# ---------------------------------------------------------------------------
+
+mesh8 = make_mesh((8,), ("data",))
+key = jax.random.PRNGKey(0)
+ks = jax.random.split(key, 2)
+grads = {"w": jax.random.normal(ks[0], (8, 4, 6)),
+         "b": jax.random.normal(ks[1], (8, 16))}
+
+# 1. all-ones mask is bitwise-equal to the plain psum mean
+ones = jnp.ones((8,), jnp.float32)
+masked = aggregation.masked_psum_mean(grads, ones, mesh8, ("data",))
+plain = aggregation.psum_mean(grads, mesh8, ("data",))
+check("all-ones masked == plain mean (bitwise)",
+      all(bool(jnp.all(a == b)) for a, b in
+          zip(jax.tree.leaves(masked), jax.tree.leaves(plain))))
+
+# 2. a masked-out worker's gradient has exactly zero influence
+mask = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+base = aggregation.masked_psum_mean(grads, mask, mesh8, ("data",))
+poisoned = jax.tree.map(lambda l: l.at[2].set(1e30).at[6].set(-1e30), grads)
+out = aggregation.masked_psum_mean(poisoned, mask, mesh8, ("data",))
+check("masked-out workers have zero influence (bitwise)",
+      all(bool(jnp.all(a == b)) for a, b in
+          zip(jax.tree.leaves(base), jax.tree.leaves(out))))
+
+# 3. mesh path agrees with the LOCAL reference semantics
+local = collectives.masked_grad_mean(grads, mask, shd.LOCAL)
+check("mesh psum == LOCAL reference (1e-6)",
+      all(bool(jnp.max(jnp.abs(a - b)) < 1e-6) for a, b in
+          zip(jax.tree.leaves(base), jax.tree.leaves(local))))
+
+# 4. collectives dispatches through the layout's dp axes
+lay = shd.Layout(mesh=mesh8, mode="train_sp", dp=("data",))
+via_layout = collectives.masked_grad_mean(grads, mask, lay)
+check("collectives.masked_grad_mean routes to the mesh",
+      all(bool(jnp.all(a == b)) for a, b in
+          zip(jax.tree.leaves(base), jax.tree.leaves(via_layout))))
+
+# 5. all-masked step divides by 1, stays finite
+dead = aggregation.masked_psum_mean(grads, jnp.zeros((8,)), mesh8, ("data",))
+check("all-masked stays finite and zero",
+      all(bool(jnp.all(jnp.isfinite(l))) and bool(jnp.all(l == 0.0))
+          for l in jax.tree.leaves(dead)))
+
+# ---------------------------------------------------------------------------
+# named_sharding divisibility rules at tp=4.
+# ---------------------------------------------------------------------------
+
+mesh24 = make_mesh((2, 4), ("data", "model"))
+lay_sp = shd.make_layout(mesh24, "train_sp")
+specs = shd.named_sharding(
+    {"w": jnp.ones((3, 5)),        # nothing divides 4 -> replicate
+     "v": jnp.ones((3, 8)),        # dim 1 is the first divisible
+     "u": jnp.ones((8, 5)),        # FSDP dim 0
+     "seg": [jnp.ones((3, 8, 5))]},  # stacked: dim 1
+    lay_sp, stacked_paths=("seg",))
+check("indivisible leaf replicates", specs["w"].spec == P(None, None))
+check("first divisible dim gets the model axis",
+      specs["v"].spec == P(None, "model"))
+check("FSDP dim-0 when divisible", specs["u"].spec == P("model", None))
+check("stacked leaf shards dim 1", specs["seg"][0].spec == P(None, "model",
+                                                             None))
+
+lay_dec = shd.make_layout(mesh24, "decode_tp")
+specs_d = shd.named_sharding({"u": jnp.ones((8, 12))}, lay_dec)
+check("decode_tp prefers the last dim", specs_d["u"].spec == P(None, "model"))
+
+# act divisibility fallback at tp=4: odd seq dim replicates, no error
+lay = lay_sp
+x = jnp.ones((4, 6, 8))  # seq 6 % 4 != 0
+with shd.use_layout(lay):
+    y = jax.jit(lambda a: shd.act(a, "dp", "sp", None))(x)
+check("act falls back to replicated on indivisible dims",
+      y.shape == x.shape and bool(jnp.all(y == x)))
+
+print("dist_check:", "FAIL" if failures else "OK", failures)

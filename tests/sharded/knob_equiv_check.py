@@ -1,18 +1,27 @@
-"""All perf knobs preserve numerics (loss+grads) vs baseline, sharded."""
+"""All perf knobs preserve numerics (loss+grads) vs baseline, sharded.
+
+Promoted from scratch/knob_equiv_test.py: runs on 8 fake CPU devices in a
+subprocess (driven by tests/test_sharded_equivalence.py).  Archs can be
+narrowed via argv to keep CI wall-clock in check."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
+import sys
+
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from repro.configs.base import get_config
 from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
 from repro.launch.train import make_loss_fn
 from repro.models import model as M
 from repro.perf.knobs import use_knobs
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+ARCHS = sys.argv[1:] or ["qwen2-0.5b", "gemma3-12b", "deepseek-moe-16b"]
+mesh = make_mesh((2, 4), ("data", "model"))
 
-for name in ["qwen2-0.5b", "gemma3-12b", "deepseek-moe-16b"]:
+for name in ARCHS:
     cfg = get_config(name).reduced()
     if cfg.n_experts:
         cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.n_experts))
@@ -31,22 +40,29 @@ for name in ["qwen2-0.5b", "gemma3-12b", "deepseek-moe-16b"]:
     results = {}
     for tag, kw in [("base", {}),
                     ("shardmap", dict(fsdp_gather="shardmap")),
-                    ("ring+shardmap", dict(ce_impl="ring", fsdp_gather="shardmap")),
+                    ("ring+shardmap", dict(ce_impl="ring",
+                                           fsdp_gather="shardmap")),
                     ("qchunk8", dict(q_chunk=8)),
                     ("halo", dict(attn_halo=True)),
                     ("bf16s", dict(attn_scores_bf16=True))]:
         with use_knobs(**kw):
             stacked = [f"segments/{i}" for i, s in enumerate(
                 M.build_segments(M.layer_specs(cfg))) if s.repeats > 1]
-            pshard = shd.named_sharding(params, lay, stacked_paths=tuple(stacked))
+            pshard = shd.named_sharding(params, lay,
+                                        stacked_paths=tuple(stacked))
             params_s = jax.device_put(params, pshard)
-            bshard = {k: NamedSharding(mesh, P("data", "model")) if v.ndim == 2
-                      else NamedSharding(mesh, P("data")) for k, v in batch.items()}
-            batch_s = {k: jax.device_put(v, bshard[k]) for k, v in batch.items()}
+            bshard = {k: NamedSharding(mesh, P("data", "model"))
+                      if v.ndim == 2 else NamedSharding(mesh, P("data"))
+                      for k, v in batch.items()}
+            batch_s = {k: jax.device_put(v, bshard[k])
+                       for k, v in batch.items()}
+
             def run(p, b, kw=kw):
                 with shd.use_layout(lay), use_knobs(**kw):
-                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, norm)
+                    (l, _), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(p, b, norm)
                 return l, g
+
             with jax.set_mesh(mesh):
                 results[tag] = jax.jit(run)(params_s, batch_s)
     l0, g0 = results["base"]
@@ -55,6 +71,7 @@ for name in ["qwen2-0.5b", "gemma3-12b", "deepseek-moe-16b"]:
         dl = abs(float(l0) - float(l))
         gerr = max(float(jnp.max(jnp.abs(a - b)))
                    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g)))
-        tol = (3e-2, 0.2) if tag == 'bf16s' else (1e-4, 1e-3)
+        tol = (3e-2, 0.2) if tag == "bf16s" else (1e-4, 1e-3)
         ok = dl < tol[0] and gerr < tol[1]
-        print(f"{name:18s} {tag:14s} dloss={dl:.2e} gerr={gerr:.2e} {'OK' if ok else 'FAIL'}")
+        print(f"{name:18s} {tag:14s} dloss={dl:.2e} gerr={gerr:.2e} "
+              f"{'OK' if ok else 'FAIL'}")

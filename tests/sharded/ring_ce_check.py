@@ -4,16 +4,16 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
 
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import get_config
 from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
 from repro.launch.train import make_loss_fn
 from repro.models import model as M
 from repro.perf.knobs import use_knobs
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 for name in ["qwen2-0.5b", "starcoder2-3b"]:  # tied + untied
     cfg = get_config(name).reduced()

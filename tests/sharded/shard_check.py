@@ -5,15 +5,15 @@ import dataclasses
 import sys
 
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import get_config, all_archs
 from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
 from repro.models import model as M
 
 ARCHS = sys.argv[1:] or list(all_archs())
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+mesh = make_mesh((2, 4), ("data", "model"))
 
 for name in ARCHS:
     cfg = get_config(name).reduced()
@@ -33,8 +33,9 @@ for name in ARCHS:
         batch["image_mask"] = jnp.zeros((B, S), bool)
         batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
     if cfg.is_encoder_decoder:
-        batch["frames"] = jax.random.normal(key, (B, 32, cfg.d_model)) * 0.1
-        cfg = dataclasses.replace(cfg, encoder_seq_len=32)
+        # reduced() pins encoder_seq_len=32; frames must match it
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model)) * 0.1
 
     def loss_fn(p, b):
         return M.train_loss(cfg, p, b)[0]

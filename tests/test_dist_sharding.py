@@ -1,0 +1,208 @@
+"""Unit tests for the repro.dist.sharding API itself (satellite of the
+dist-subsystem PR): LOCAL is a pure no-op, use_layout nests correctly, and
+named_sharding emits the right PartitionSpecs on a 1-device mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import collectives
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+
+
+# ---------------------------------------------------------------------------
+# LOCAL is a pure no-op.
+# ---------------------------------------------------------------------------
+
+
+def test_default_layout_is_local():
+    lay = shd.layout()
+    assert lay is shd.LOCAL
+    assert lay.mesh is None and lay.mode == "local"
+    assert lay.dp == () and lay.dp_size == 1 and lay.n_shards == 1
+    assert lay.axis("dp") is None
+    assert lay.axis("sp") is None
+    assert lay.axis("tp") is None
+    assert lay.dp_for(16) is None
+
+
+def test_local_act_and_use_weight_are_identity():
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+    assert shd.act(x, "dp", "sp", "tp") is x
+    assert shd.act(x, None, None, None) is x
+    tree = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    assert shd.use_weight(tree) is tree
+
+
+def test_local_named_sharding_is_all_none():
+    tree = {"a": jnp.ones((4, 8)), "seg": [jnp.ones((2, 4))]}
+    out = shd.named_sharding(tree, shd.LOCAL)
+    assert all(v is None for v in jax.tree.leaves(
+        out, is_leaf=lambda x: x is None))
+
+
+def test_make_layout_none_mesh_returns_local():
+    assert shd.make_layout(None, "train_sp") is shd.LOCAL
+
+
+# ---------------------------------------------------------------------------
+# use_layout nesting / unroll_loops.
+# ---------------------------------------------------------------------------
+
+
+def test_use_layout_restores_previous_on_exit():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay1 = shd.make_layout(mesh, "train_sp")
+    lay2 = shd.make_layout(mesh, "decode_tp")
+    assert shd.layout() is shd.LOCAL
+    with shd.use_layout(lay1):
+        assert shd.layout() is lay1
+        with shd.use_layout(lay2):
+            assert shd.layout() is lay2
+        assert shd.layout() is lay1
+    assert shd.layout() is shd.LOCAL
+
+
+def test_use_layout_restores_on_exception():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    with pytest.raises(RuntimeError):
+        with shd.use_layout(lay):
+            raise RuntimeError("boom")
+    assert shd.layout() is shd.LOCAL
+
+
+def test_unroll_loops_flag():
+    assert not shd.unrolled()
+    with shd.unroll_loops():
+        assert shd.unrolled()
+        with shd.unroll_loops(False):
+            assert not shd.unrolled()
+        assert shd.unrolled()
+    assert not shd.unrolled()
+
+
+# ---------------------------------------------------------------------------
+# make_layout mode tables.
+# ---------------------------------------------------------------------------
+
+
+def test_make_layout_modes_single_pod():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    sp = shd.make_layout(mesh, "train_sp")
+    assert sp.dp == ("data",) and sp.model_axis == "model"
+    assert sp.seq_axis == "model" and sp.tp_axis is None
+    fsdp = shd.make_layout(mesh, "train_fsdp")
+    assert fsdp.dp == ("data", "model") and fsdp.seq_axis is None
+    dec = shd.make_layout(mesh, "decode_tp")
+    assert dec.dp == ("data",) and dec.tp_axis == "model"
+    assert dec.seq_axis is None
+    with pytest.raises(ValueError):
+        shd.make_layout(mesh, "nonsense")
+
+
+def test_make_layout_multi_pod_dp_axes():
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    assert lay.dp == ("pod", "data")
+    assert lay.model_axis == "model"
+    assert lay.axis("dp") == ("pod", "data")
+
+
+def test_dp_for_divisibility():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    # dp_size == 1 divides everything
+    assert lay.dp_for(4) == ("data",)
+    assert lay.dp_for(1) == ("data",)
+
+
+# ---------------------------------------------------------------------------
+# named_sharding PartitionSpecs on a 1-device mesh.
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "embed": {"table": jnp.ones((8, 4))},
+        "segments": [
+            # stacked segment: leading dim 3 is the scan repeats dim
+            [{"w": jnp.ones((3, 4, 8)), "scale": jnp.ones((3, 4))}],
+            # unstacked segment
+            [{"w": jnp.ones((4, 8)), "scale": jnp.ones((4,))}],
+        ],
+        "step": jnp.float32(0.0),
+    }
+
+
+def test_named_sharding_specs_train_sp():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    out = shd.named_sharding(_tree(), lay, stacked_paths=("segments/0",))
+    # unstacked: FSDP dim 0
+    assert out["embed"]["table"].spec == P("model", None)
+    assert out["segments"][1][0]["w"].spec == P("model", None)
+    assert out["segments"][1][0]["scale"].spec == P("model")
+    # stacked: dim 0 is the repeats dim -> FSDP dim 1
+    assert out["segments"][0][0]["w"].spec == P(None, "model", None)
+    assert out["segments"][0][0]["scale"].spec == P(None, "model")
+    # scalars replicate
+    assert out["step"].spec == P()
+    for ns in jax.tree.leaves(out):
+        assert ns.mesh is mesh
+
+
+def test_named_sharding_specs_decode_tp_prefers_last_dim():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "decode_tp")
+    out = shd.named_sharding(_tree(), lay, stacked_paths=("segments/0",))
+    assert out["embed"]["table"].spec == P(None, "model")
+    assert out["segments"][0][0]["w"].spec == P(None, None, "model")
+
+
+def test_named_sharding_accepts_abstract_leaves():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    tree = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    out = shd.named_sharding(tree, lay)
+    assert out["w"].spec == P("model", None)
+
+
+# ---------------------------------------------------------------------------
+# act on a real (1-device) mesh: shape-preserving, divisibility fallback.
+# ---------------------------------------------------------------------------
+
+
+def test_act_constrains_under_mesh_and_preserves_values():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    x = jnp.arange(2 * 4 * 6, dtype=jnp.float32).reshape(2, 4, 6)
+
+    with shd.use_layout(lay):
+        y = jax.jit(lambda a: shd.act(a, "dp", "sp", None))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    # odd seq dim falls back to replicated instead of erroring
+    x2 = jnp.ones((2, 3, 6))
+    with shd.use_layout(lay):
+        y2 = jax.jit(lambda a: shd.act(a, "dp", "sp", None))(x2)
+    assert y2.shape == x2.shape
+
+
+def test_use_weight_gathers_under_train_layout():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "train_sp")
+    w = jnp.arange(16.0).reshape(4, 4)
+    with shd.use_layout(lay):
+        out = jax.jit(lambda a: shd.use_weight({"w": a}))(w)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(w))
+
+
+def test_use_weight_identity_under_decode_tp():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    lay = shd.make_layout(mesh, "decode_tp")
+    tree = {"w": jnp.ones((4, 4))}
+    with shd.use_layout(lay):
+        assert shd.use_weight(tree) is tree

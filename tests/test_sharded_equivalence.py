@@ -1,8 +1,9 @@
-"""Sharded (train_sp 2x4 mesh) == local, loss and grads, for every arch.
+"""Sharded == local equivalences, driven through subprocess payloads.
 
-Runs in a SUBPROCESS because it needs XLA_FLAGS=--xla_force_host_platform_
-device_count=8 before jax init (the main pytest process must keep 1 device
-per the assignment).
+Each payload (tests/sharded/*_check.py) needs XLA_FLAGS=--xla_force_host_
+platform_device_count=8 before jax init, so it runs in a SUBPROCESS (the
+main pytest process must keep 1 device per the assignment).  Payloads print
+one OK/FAIL line per checked property; a FAIL anywhere fails the test.
 """
 import os
 import subprocess
@@ -10,93 +11,45 @@ import sys
 
 import pytest
 
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import dataclasses, sys
-import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
-from repro.configs.base import get_config
-from repro.dist import sharding as shd
-from repro.models import model as M
 
-name = sys.argv[1]
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
-cfg = get_config(name).reduced()
-if cfg.n_experts:
-    cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.n_experts))
-if cfg.is_encoder_decoder:
-    cfg = dataclasses.replace(cfg, encoder_seq_len=32)
-key = jax.random.PRNGKey(0)
-params = M.init_model(cfg, key)
-B, S = 4, 32
-batch = {
-    "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
-    "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
-    "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
-    "weights": jnp.asarray([1.0, 0.0, 1.0, 1.0]),
-}
-if cfg.frontend == "vision_patches":
-    batch["patch_embeds"] = jnp.zeros((B, S, cfg.d_model))
-    batch["image_mask"] = jnp.zeros((B, S), bool)
-    batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
-if cfg.is_encoder_decoder:
-    batch["frames"] = jax.random.normal(key, (B, 32, cfg.d_model)) * 0.1
-
-loss_fn = lambda p, b: M.train_loss(cfg, p, b)[0]
-with shd.use_layout(shd.LOCAL):
-    loss_ref = loss_fn(params, batch)
-    g_ref = jax.grad(loss_fn)(params, batch)
-
-lay = shd.make_layout(mesh, "train_sp")
-stacked = [f"segments/{i}" for i, s in enumerate(
-    M.build_segments(M.layer_specs(cfg))) if s.repeats > 1]
-pshard = shd.named_sharding(params, lay, stacked_paths=tuple(stacked))
-params_s = jax.device_put(params, pshard)
-
-def bspec(k, v):
-    if k == "positions" and v.ndim == 3:
-        return NamedSharding(mesh, P(None, "data", "model"))
-    if k in ("frames", "patch_embeds"):
-        return NamedSharding(mesh, P("data", "model", None))
-    if v.ndim >= 2:
-        return NamedSharding(mesh, P("data", "model"))
-    return NamedSharding(mesh, P("data"))
-batch_s = {k: jax.device_put(v, bspec(k, v)) for k, v in batch.items()}
-
-def run(p, b):
-    with shd.use_layout(lay):
-        return loss_fn(p, b), jax.grad(loss_fn)(p, b)
-
-with jax.set_mesh(mesh):
-    loss_s, g_s = jax.jit(run)(params_s, batch_s)
-
-dl = abs(float(loss_ref) - float(loss_s))
-gerr = max(float(jnp.max(jnp.abs(a - b)))
-           for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_s)))
-assert dl < 2e-4 and gerr < 2e-2, (name, dl, gerr)
-print(f"{name}: dloss={dl:.2e} gerr={gerr:.2e} OK")
-"""
-
-
-@pytest.mark.slow
-def test_sharded_equivalence_all_archs(arch_name):
+def _run_check(args, timeout=1200):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", SCRIPT, arch_name],
-                       capture_output=True, text=True, env=env, timeout=900)
-    assert r.returncode == 0, f"\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-2000:]}"
-
-
-@pytest.mark.slow
-def test_ring_ce_equals_dense():
-    """Vocab-ring fused CE == dense CE (loss+grads), tied & untied heads."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    script = os.path.join(os.path.dirname(__file__), "sharded",
-                          "ring_ce_check.py")
-    r = subprocess.run([sys.executable, script], capture_output=True,
-                       text=True, env=env, timeout=1200)
+    r = subprocess.run([sys.executable] + args, capture_output=True,
+                       text=True, env=env, timeout=timeout)
     assert r.returncode == 0 and "FAIL" not in r.stdout, (
         f"\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-2000:]}")
+    return r
+
+
+def _check_path(name):
+    return os.path.join(os.path.dirname(__file__), "sharded", name)
+
+
+@pytest.mark.slow
+@pytest.mark.sharded
+def test_sharded_equivalence_all_archs(arch_name):
+    """Sharded (train_sp 2x4 mesh) == local, loss and grads, per arch."""
+    _run_check([_check_path("shard_check.py"), arch_name], timeout=900)
+
+
+@pytest.mark.slow
+@pytest.mark.sharded
+def test_ring_ce_equals_dense():
+    """Vocab-ring fused CE == dense CE (loss+grads), tied & untied heads."""
+    _run_check([_check_path("ring_ce_check.py")])
+
+
+@pytest.mark.sharded
+def test_dist_collectives_and_layout_rules():
+    """Masked psum aggregation + named_sharding rules on 8 fake devices."""
+    _run_check([_check_path("dist_check.py")], timeout=600)
+
+
+@pytest.mark.slow
+@pytest.mark.sharded
+def test_perf_knobs_preserve_numerics():
+    """Every perf knob (shardmap gather, ring CE, q-chunk, halo, bf16
+    scores) matches the baseline loss+grads on the train_sp mesh."""
+    _run_check([_check_path("knob_equiv_check.py"), "qwen2-0.5b",
+                "gemma3-12b", "deepseek-moe-16b"], timeout=1800)
