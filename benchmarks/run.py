@@ -1,7 +1,10 @@
 """Benchmark entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only agg]
+
+``--only agg`` runs just the aggregation-path section (what
+``scripts/ci.sh --bench`` uses); it also writes ``BENCH_agg.json``.
 """
 import argparse
 import sys
@@ -12,12 +15,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the 2175-worker Cray model + shrink fig4")
+    ap.add_argument("--only", default=None, choices=["agg"],
+                    help="run a single benchmark section")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, paper_figures, roofline
+    from benchmarks import agg_bench, kernels_bench, paper_figures, roofline
 
     t0 = time.time()
     print("name,us_per_call,derived")
+    if args.only == "agg":
+        agg_bench.bench_agg(quick=args.quick)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
     paper_figures.bench_elfving_table()
     paper_figures.bench_fig2_throughput()
     paper_figures.bench_fig3_prediction(cray=not args.quick)
@@ -26,6 +35,7 @@ def main() -> None:
     paper_figures.bench_censoring_ablation()
     kernels_bench.bench_kernels()
     roofline.bench_roofline()
+    agg_bench.bench_agg(quick=args.quick)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

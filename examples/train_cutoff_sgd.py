@@ -41,6 +41,11 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt_100m")
     ap.add_argument("--method", default="cutoff",
                     choices=["cutoff", "sync"])
+    ap.add_argument("--mask-agg", default="weights",
+                    choices=["weights", "psum"],
+                    help="how the bit array meets the gradients: folded "
+                         "per-example weights (production) or the explicit "
+                         "per-worker gradient psum")
     args = ap.parse_args()
 
     cfg = model_100m()
@@ -63,10 +68,12 @@ def main():
                            global_batch=args.batch, seed=0)
     opt = optim.clip_by_global_norm(
         optim.adamw(optim.cosine_schedule(3e-4, 50, args.steps)), 1.0)
-    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+    step = jax.jit(make_train_step(cfg, opt, mask_agg=args.mask_agg),
+                   donate_argnums=(0,))
     tr = Trainer(cfg=cfg, step_fn=step, data=data, controller=ctl,
                  timer=ClusterSim(n_workers=args.workers, n_nodes=4, seed=9),
-                 n_workers=args.workers, ckpt_dir=args.ckpt, ckpt_every=100)
+                 n_workers=args.workers, mask_agg=args.mask_agg,
+                 ckpt_dir=args.ckpt, ckpt_every=100)
 
     def init_fn():
         params = M.init_model(cfg, jax.random.PRNGKey(0))

@@ -4,10 +4,17 @@
 #
 #   scripts/ci.sh            # full tier-1 suite
 #   scripts/ci.sh -m "not sharded"   # skip the multi-device subprocess tests
+#   scripts/ci.sh --bench    # aggregation-path perf run -> BENCH_agg.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--bench" ]]; then
+    shift
+    python -m benchmarks.run --quick --only agg "$@"
+    exit 0
+fi
 
 python -m pytest -x -q "$@"

@@ -96,12 +96,14 @@ class ClusterSim:
 # ---------------------------------------------------------------------------
 
 
-def paper_cluster_158(seed: int = 0) -> ClusterSim:
+def paper_cluster_158(seed: int = 0, n_workers: int = 158) -> ClusterSim:
     """4 nodes x 40 Xeon cores, 1 PS + 1 spare => 158 workers (paper §4.1).
 
     Calibrated near the paper's measured moments (mean 1.057 s, std 0.393 s).
+    ``n_workers`` scales the same phenomenology down for CPU-budget
+    end-to-end tests (node count and per-worker moments unchanged).
     """
-    return ClusterSim(n_workers=158, n_nodes=4, base_mean=1.0,
+    return ClusterSim(n_workers=n_workers, n_nodes=4, base_mean=1.0,
                       worker_hetero=0.15, noise_sigma=0.07,
                       spike_prob=0.02, spike_scale=0.9, seed=seed)
 

@@ -14,7 +14,9 @@ Two equivalent implementations:
    per-worker gradients, used by tests to prove (1) is equivalent and as
    the reference semantics.  ``psum_mean`` is the full-sync baseline with
    the identical reduction order (so all-ones-mask comparisons can demand
-   bitwise equality).
+   bitwise equality).  ``masked_mean_local`` is the in-process (no mesh)
+   form of the same combine; ``kernels.ops.masked_aggregate_tree`` fuses
+   it into one HBM pass on TPU.
 
 The layout-aware entry points live in ``repro.dist.collectives``; this
 module stays mesh-explicit so it can be tested against hand-built meshes.
@@ -39,6 +41,26 @@ def example_weights(mask: np.ndarray, global_batch: int) -> np.ndarray:
     n = mask.shape[0]
     assert global_batch % n == 0, (global_batch, n)
     return np.repeat(mask, global_batch // n)
+
+
+def _bc(bit, leaf):
+    return bit.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+
+def masked_mean_local(grads, mask_bit):
+    """In-process reference combine: sum_w bit_w g_w / max(sum bit, 1).
+
+    The no-mesh counterpart of ``masked_psum_mean`` — same math, same
+    clamp, over the leading worker dim of each leaf.  This is the oracle
+    the Pallas host-combine kernel (``kernels.masked_grad_agg``) is
+    checked against, and the LOCAL path of
+    ``dist.collectives.masked_grad_mean``.
+    """
+    bit = jnp.asarray(mask_bit)
+    c = jnp.maximum(jnp.sum(bit.astype(jnp.float32)), 1.0)
+    return jax.tree.map(
+        lambda l: jnp.sum(l * _bc(bit, l), axis=0) / c.astype(l.dtype),
+        grads)
 
 
 def _worker_reduce(grads, mask_bit, mesh, dp_axes, *, apply_mask: bool):

@@ -19,13 +19,21 @@ from repro.core.cutoff._normal import ndtr as _ndtr, ndtri as _ndtri
 
 
 def truncated_normal_sample(mu, sigma, lower, rng) -> np.ndarray:
-    """Sample x ~ N(mu, sigma^2) | x > lower (elementwise)."""
+    """Sample x ~ N(mu, sigma^2) | x > lower (elementwise).
+
+    Far in the right tail (lower >> mu) the CDF saturates and the
+    inverse-CDF draw degenerates, so the result is clamped at ``lower`` —
+    the correct limit of the truncated distribution as its mass above the
+    bound vanishes.
+    """
     mu = np.asarray(mu, np.float64)
+    lower = np.asarray(lower, np.float64)
     sigma = np.maximum(np.asarray(sigma, np.float64), 1e-9)
-    a = _ndtr((np.asarray(lower) - mu) / sigma)
+    a = _ndtr((lower - mu) / sigma)
     a = np.clip(a, 0.0, 1.0 - 1e-9)
     u = a + (1.0 - a) * rng.uniform(size=mu.shape)
-    return mu + sigma * _ndtri(np.clip(u, 1e-12, 1 - 1e-12))
+    return np.maximum(mu + sigma * _ndtri(np.clip(u, 1e-12, 1 - 1e-12)),
+                      lower)
 
 
 def impute_censored(observed: np.ndarray, finished_mask: np.ndarray,

@@ -33,7 +33,9 @@ def optimal_cutoff(samples: np.ndarray, min_frac: float = 0.0) -> int:
     """
     omega = throughput_curve(samples)
     n = omega.shape[0]
-    lo = int(np.ceil(min_frac * n))
+    # clamp so min_frac=1.0 degenerates to full sync instead of an empty
+    # argmax
+    lo = min(int(np.ceil(min_frac * n)), n - 1)
     c = int(np.argmax(omega[lo:]) + lo) + 1
     return min(c, n)
 

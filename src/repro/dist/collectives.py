@@ -7,11 +7,14 @@ bit array each step; this module is how that bit array meets the SPMD mesh:
     bit array to per-example weights folded into the loss.  The gradient
     all-reduce GSPMD already emits then implements the masked mean exactly,
     with zero extra collectives.  ``launch.train.Trainer`` uses this.
-  * ``masked_grad_mean``  — the REFERENCE semantics: explicit bit-array
-    aggregation over per-worker gradients (leading worker dim).  Under
-    LOCAL it is a pure-jnp weighted mean; under a mesh layout it is the
-    shard_map psum of ``core.aggregation.masked_psum_mean`` over the
-    layout's dp axes.  Tests prove the two paths agree.
+  * ``masked_grad_mean``  — the EXPLICIT path (``mask_agg="psum"`` in
+    ``launch.train``): bit-array aggregation over per-worker gradients
+    (leading worker dim).  Under LOCAL the stacked host combine goes
+    through ``kernels.ops.masked_aggregate_tree`` (the Pallas
+    masked_grad_agg kernel on TPU / interpret, pure jnp under the "xla"
+    backend); under a mesh layout it is the shard_map psum of
+    ``core.aggregation.masked_psum_mean`` over the layout's dp axes.
+    Tests prove the two paths agree.
   * ``grad_mean``         — the full-sync baseline (all-ones mask) with
     identical reduction order, so masked-vs-plain comparisons can demand
     bitwise equality.
@@ -37,25 +40,19 @@ def example_weights(mask: np.ndarray, global_batch: int) -> np.ndarray:
     return aggregation.example_weights(mask, global_batch)
 
 
-def _bc(bit, leaf):
-    return bit.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-
-
 def masked_grad_mean(grads, mask_bit, lay: Optional[shd.Layout] = None):
     """Masked mean over per-worker gradients: sum_w bit_w g_w / sum_w bit_w.
 
     ``grads`` leaves carry a leading worker dim (n_workers, ...); under a
     mesh layout n_workers must equal the layout's dp_size and the psum runs
-    over the dp axes.  Under LOCAL the same reduction happens in-process.
+    over the dp axes.  Under LOCAL the same reduction happens in-process,
+    through the kernel-backend dispatch of ``ops.masked_aggregate_tree``.
     The worker dim is dropped from the result.
     """
     lay = lay if lay is not None else shd.layout()
     if lay.mesh is None or not lay.dp:
-        bit = jnp.asarray(mask_bit)
-        c = jnp.maximum(jnp.sum(bit.astype(jnp.float32)), 1.0)
-        return jax.tree.map(
-            lambda l: jnp.sum(l * _bc(bit, l), axis=0) / c.astype(l.dtype),
-            grads)
+        from repro.kernels import ops
+        return ops.masked_aggregate_tree(grads, jnp.asarray(mask_bit))
     from repro.core import aggregation
     return aggregation.masked_psum_mean(grads, mask_bit, lay.mesh, lay.dp)
 

@@ -5,6 +5,10 @@ TARGET: TPU VPU.  On a host aggregating W virtual-worker sub-gradients
 bandwidth-bound weighted reduction.  The kernel fuses mask-scale-accumulate
 in one HBM pass over the stacked buffer; the result feeds the bit-array ring
 all-reduce across hosts.
+
+Callers go through ``kernels.ops.masked_aggregate`` /
+``masked_aggregate_tree``, which flatten arbitrary gradient pytrees into
+the (W, N) contract and pad N so the block size divides it.
 """
 from __future__ import annotations
 
@@ -32,8 +36,9 @@ def masked_grad_agg(grads, mask, *, block: int = 2048,
     N must be a multiple of 128 (ops.py pads).
     """
     W, N = grads.shape
+    assert mask.shape == (W, 1), mask.shape
     bc = min(block, N)
-    assert N % bc == 0
+    assert N % bc == 0, (N, bc)
     return pl.pallas_call(
         _kernel,
         grid=(N // bc,),

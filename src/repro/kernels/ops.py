@@ -87,14 +87,49 @@ def adam_update_tree(params, grads, m, v, step, lr, *, b1=0.9, b2=0.999,
     return unf(0), unf(1), unf(2)
 
 
-def masked_aggregate(grads_stacked, mask):
-    """grads_stacked: (W, N); mask: (W,) -> (N,) cutoff-weighted mean."""
+def masked_aggregate(grads_stacked, mask, *, block: int = 2048):
+    """grads_stacked: (W, N); mask: (W,) -> (N,) cutoff-weighted mean.
+
+    Pads N up to the kernel's lane contract: a multiple of 128 when one
+    block covers it, a multiple of ``block`` when the grid tiles it (the
+    kernel requires the block size to divide the padded N).
+    """
     m = _mode()
     mask2 = mask.reshape(-1, 1)
     if m == "xla":
         return ref.reference_masked_agg(grads_stacked, mask2)[0]
+    assert block % 128 == 0, block   # the kernel's lane contract
     W, N = grads_stacked.shape
-    pad = (-N) % 128
+    tile = block if N > block else 128
+    pad = (-N) % tile
     gp = jnp.pad(grads_stacked, ((0, 0), (0, pad)))
-    out = _ma.masked_grad_agg(gp, mask2, interpret=(m == "interpret"))
+    out = _ma.masked_grad_agg(gp, mask2, block=block,
+                              interpret=(m == "interpret"))
     return out[0, :N]
+
+
+def masked_aggregate_tree(grads, mask, *, block: int = 2048):
+    """Masked mean over the leading worker dim of a gradient pytree.
+
+    The host-side stacked combine behind ``dist.collectives`` when no mesh
+    is active: every leaf (W, ...) is flattened to (W, n) and concatenated
+    into one (W, N) buffer so the whole tree is a single fused HBM pass of
+    the masked_grad_agg kernel (fp32 accumulation, padded to the 128-lane
+    contract), then split and cast back per leaf.  Under the "xla" backend
+    it is the pure-jnp reference (``aggregation.masked_mean_local``), which
+    keeps each leaf in its own dtype.
+    """
+    if _mode() == "xla":
+        from repro.core import aggregation
+        return aggregation.masked_mean_local(grads, mask)
+    flat, tree = jax.tree.flatten(grads)
+    W = flat[0].shape[0]
+    buf = jnp.concatenate(
+        [l.reshape(W, -1).astype(jnp.float32) for l in flat], axis=1)
+    out = masked_aggregate(buf, jnp.asarray(mask, jnp.float32), block=block)
+    outs, off = [], 0
+    for l in flat:
+        n = l.size // W
+        outs.append(out[off:off + n].reshape(l.shape[1:]).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(tree, outs)

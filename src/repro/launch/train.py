@@ -2,16 +2,23 @@
 
 ``make_train_step`` builds the jit-able step:
 
-  * per-example weights carry the cutoff bit-array (paper Alg. 1 /
-    §4.3 production variant) — masked gradients, renormalized by c, with no
-    extra collectives beyond the DP psum GSPMD already emits;
+  * ``mask_agg="weights"`` (production, paper Alg. 1 / §4.3 variant):
+    per-example weights carry the cutoff bit-array — masked gradients,
+    renormalized by c, with no extra collectives beyond the DP psum GSPMD
+    already emits;
+  * ``mask_agg="psum"`` (explicit, Chen et al.'s PS semantics): the step
+    computes per-worker microbatch gradients (leading worker dim, the
+    grad-accum scan machinery) and aggregates them through
+    ``dist.collectives.masked_grad_mean`` — the Pallas host combine under
+    LOCAL, the shard_map psum under a mesh layout;
   * optional gradient accumulation (microbatching) — the activation-memory
     knob, also what overlaps per-microbatch gradient reduce with compute;
   * ZeRO-1/3: params FSDP-sharded over "model", optimizer moments optionally
     sharded over "data" too.
 
-The ``Trainer`` is the host-side driver: controller -> bit-array -> weights,
-per-worker sampling with replacement, simulated (or measured) step times,
+The ``Trainer`` is the host-side driver: controller -> bit-array ->
+weights (or the bit array itself under ``mask_agg="psum"``), per-worker
+sampling with replacement, simulated (or measured) step times,
 checkpoint/restart, elastic resize.
 """
 from __future__ import annotations
@@ -69,14 +76,50 @@ def make_loss_fn(cfg, aux_coef: float = 0.01):
     return loss_fn
 
 
+MASK_AGG_MODES = ("weights", "psum")
+
+
+def _split_batch(batch, parts: int):
+    """Split every batch entry into ``parts`` leading microbatches."""
+    def split(k, v):
+        if k == "positions" and v.ndim == 3:
+            return v.reshape(
+                (3, parts, v.shape[1] // parts)
+                + v.shape[2:]).swapaxes(0, 1)
+        return v.reshape((parts, v.shape[0] // parts) + v.shape[1:])
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
 def make_train_step(cfg, optimizer: optim.Optimizer, *,
                     grad_accum: int = 1, aux_coef: float = 0.01,
-                    compress_pod_grads: bool = False):
+                    compress_pod_grads: bool = False,
+                    mask_agg: str = "weights"):
     """Returns train_step(state, batch) -> (state, metrics).
 
-    state = {"params", "opt", ["ef"]}.  batch["weights"] is the per-example
-    cutoff mask expanded by ``dist.collectives.example_weights``.
+    state = {"params", "opt", ["ef"]}.
+
+    mask_agg="weights": batch["weights"] is the per-example cutoff mask
+    expanded by ``dist.collectives.example_weights``; the masked mean is
+    implicit in the loss normalization + the DP gradient psum.
+
+    mask_agg="psum": batch["mask"] is the per-worker bit array itself
+    ((n_workers,) float, n_workers | global batch); the step scans the
+    per-worker microbatches, stacks their gradients on a leading worker
+    dim, and aggregates with ``collectives.masked_grad_mean`` — an
+    explicit combine whose numerics are independent of how many workers
+    were dropped.  Costs n_workers x gradient memory; the production
+    path is "weights".
+
+    The two paths are exactly equivalent when the auxiliary loss is zero
+    (dense archs, or aux_coef=0).  For MoE archs they differ on dropped
+    workers' load-balance aux: "psum" is the true PS semantics (a dropped
+    worker contributes nothing, aux included), while "weights" leaves the
+    aux term unweighted over the full batch.
     """
+    if mask_agg not in MASK_AGG_MODES:
+        raise ValueError(f"unknown mask_agg {mask_agg!r} "
+                         f"(want one of {MASK_AGG_MODES})")
     loss_fn = make_loss_fn(cfg, aux_coef)
 
     def normalizer_of(batch):
@@ -86,22 +129,14 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
             return jnp.asarray(B * S, jnp.float32)
         return jnp.maximum(jnp.sum(w.astype(jnp.float32)) * S, 1e-6)
 
-    def grads_of(params, batch):
-        norm = normalizer_of(batch)
+    def accum_grads_of(params, batch, norm):
+        """Summed-over-microbatches gradient at a fixed normalizer."""
         if grad_accum == 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch, norm)
             return loss, metrics, grads
 
-        def split(k, v):
-            if k == "positions" and v.ndim == 3:
-                return v.reshape(
-                    (3, grad_accum, v.shape[1] // grad_accum)
-                    + v.shape[2:]).swapaxes(0, 1)
-            return v.reshape((grad_accum, v.shape[0] // grad_accum)
-                             + v.shape[1:])
-
-        mb = {k: split(k, v) for k, v in batch.items()}
+        mb = _split_batch(batch, grad_accum)
 
         def body(carry, mbatch):
             g_acc, l_acc, a_acc = carry
@@ -116,8 +151,44 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
             body, (g0, jnp.float32(0), jnp.float32(0)), mb)
         return loss, {"ce": loss, "aux": aux / grad_accum}, grads
 
+    def grads_of(params, batch):
+        return accum_grads_of(params, batch, normalizer_of(batch))
+
+    def worker_grads_of(params, batch):
+        """Per-worker gradients, stacked on a leading worker dim.
+
+        Each worker w owns the w-th contiguous slice of the global batch
+        (the ``example_weights`` convention) and normalizes by its OWN
+        token count, so the masked mean over workers equals the weights
+        path's sum/(c*S*per) normalization exactly.
+        """
+        mask = batch["mask"]
+        W = mask.shape[0]
+        data = {k: v for k, v in batch.items() if k != "mask"}
+        B, S = data["tokens"].shape
+        assert B % W == 0, (B, W)
+        norm = jnp.asarray((B // W) * S, jnp.float32)
+        wb = _split_batch(data, W)
+
+        def body(_, mbatch):
+            loss, metrics, g = accum_grads_of(params, mbatch, norm)
+            return None, (g, loss, metrics["ce"], metrics["aux"])
+
+        _, (grads, losses, ces, auxs) = jax.lax.scan(body, None, wb)
+        return grads, losses, ces, auxs
+
+    def psum_grads_of(params, batch):
+        mask = jnp.asarray(batch["mask"], jnp.float32)
+        grads, losses, ces, auxs = worker_grads_of(params, batch)
+        grads = collectives.masked_grad_mean(grads, mask)
+        c = jnp.maximum(jnp.sum(mask), 1.0)
+        masked_mean = lambda x: jnp.sum(x * mask) / c
+        return masked_mean(losses), {"ce": masked_mean(ces),
+                                     "aux": masked_mean(auxs)}, grads
+
     def train_step(state, batch):
-        loss, metrics, grads = grads_of(state["params"], batch)
+        compute = psum_grads_of if mask_agg == "psum" else grads_of
+        loss, metrics, grads = compute(state["params"], batch)
         if compress_pod_grads:
             grads, ef = optim.error_feedback_compress(grads,
                                                       state.get("ef"))
@@ -215,6 +286,12 @@ class Trainer:
     a real mesh; on CPU they are simulated).  ``timer`` provides per-worker
     step times each iteration: a ClusterSim / TraceReplay in this container,
     per-host wall-clock measurement on real hardware.
+
+    ``mask_agg`` picks how the controller's bit array reaches the step
+    (and must match the ``make_train_step`` the ``step_fn`` was built
+    with): "weights" expands it to per-example loss weights (production),
+    "psum" hands the bit array itself to the explicit per-worker gradient
+    combine.
     """
     cfg: Any
     step_fn: Callable
@@ -222,6 +299,7 @@ class Trainer:
     controller: Any
     timer: Any = None
     n_workers: int = 8
+    mask_agg: str = "weights"
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     keep: int = 3
@@ -264,8 +342,11 @@ class Trainer:
 
             batch = self.data.batch(self.step)
             batch = dict(batch)
-            batch["weights"] = collectives.example_weights(
-                mask, batch["tokens"].shape[0])
+            if self.mask_agg == "psum":
+                batch["mask"] = jnp.asarray(mask)
+            else:
+                batch["weights"] = collectives.example_weights(
+                    mask, batch["tokens"].shape[0])
             self.state, metrics = self.step_fn(self.state, batch)
             self.step += 1
             self.sim_clock += iter_time

@@ -1,0 +1,130 @@
+"""mask_agg="psum" == mask_agg="weights" on an 8-device host mesh.
+
+The two train-step aggregation paths (per-example weights folded into the
+loss vs explicit per-worker gradient psum through the Pallas/shard_map
+combine) must produce allclose losses and parameter updates over masked
+steps, and the all-ones-mask psum path must match the full-sync
+``psum_mean`` bitwise.  Prints FAIL on any violated property; driven by
+tests/test_sharded_equivalence.py.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import get_config
+from repro.core import aggregation
+from repro.dist import collectives
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.launch.train import make_train_step
+from repro.models import model as M
+
+failures = []
+
+
+def check(name, ok):
+    print(f"{name:52s} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(name)
+
+
+W, per, S = 8, 2, 16
+B = W * per
+cfg = get_config("qwen2-0.5b").reduced()
+key = jax.random.PRNGKey(0)
+params = M.init_model(cfg, key)
+opt = optim.adamw(3e-3)
+
+mesh = make_mesh((8,), ("data",))
+# pure-DP layout: 8 workers == 8 dp shards, params replicated (no model
+# axis), so the explicit psum runs over the full mesh.
+lay = shd.Layout(mesh=mesh, mode="train_fsdp", dp=("data",))
+
+step_w = make_train_step(cfg, opt)
+step_p = make_train_step(cfg, opt, mask_agg="psum")
+
+
+def jit_step(step):
+    def run(state, batch):
+        with shd.use_layout(lay):
+            return step(state, batch)
+    return jax.jit(run)
+
+
+step_w_j, step_p_j = jit_step(step_w), jit_step(step_p)
+
+rep = NamedSharding(mesh, P())
+dp2 = NamedSharding(mesh, P("data"))
+
+
+def shard_state(state):
+    return jax.device_put(state, jax.tree.map(lambda _: rep, state))
+
+
+def make_batch(step_seed):
+    k = jax.random.PRNGKey(step_seed)
+    batch = {
+        "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+        "labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+    }
+    return {k_: jax.device_put(v, dp2 if v.ndim >= 1 else rep)
+            for k_, v in batch.items()}
+
+
+rng = np.random.default_rng(0)
+
+state_w = shard_state({"params": params, "opt": opt.init(params)})
+state_p = jax.tree.map(lambda x: x, state_w)
+
+with jax.set_mesh(mesh):
+    max_dl, max_dp = 0.0, 0.0
+    for t in range(5):
+        # a fresh random mask each step, always with >=1 straggler dropped
+        mask = (rng.uniform(size=W) < 0.7).astype(np.float32)
+        mask[rng.integers(W)] = 0.0
+        if mask.sum() == 0:
+            mask[0] = 1.0
+        bw = dict(make_batch(t),
+                  weights=jax.device_put(
+                      jnp.asarray(aggregation.example_weights(mask, B)),
+                      dp2))
+        bp = dict(make_batch(t), mask=jax.device_put(jnp.asarray(mask), rep))
+        state_w, mw = step_w_j(state_w, bw)
+        state_p, mp = step_p_j(state_p, bp)
+        max_dl = max(max_dl, abs(float(mw["loss"]) - float(mp["loss"])))
+        max_dp = max(max_dp, max(
+            float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(state_w["params"]),
+                jax.tree.leaves(state_p["params"]))))
+    check(f"5-step masked losses allclose (dl={max_dl:.2e})", max_dl < 1e-4)
+    check(f"5-step masked updates allclose (dp={max_dp:.2e})", max_dp < 1e-3)
+
+    # all-ones mask: the explicit masked combine must equal the full-sync
+    # psum_mean BITWISE on real per-worker model gradients.
+    batch = make_batch(99)
+    gs = []
+    for w in range(W):
+        sub = {k_: v[w * per:(w + 1) * per] for k_, v in batch.items()}
+        gs.append(jax.jit(jax.grad(
+            lambda p, b: M.train_loss(cfg, p, b)[0]))(params, sub))
+    stacked = jax.tree.map(lambda *x: jnp.stack(x), *gs)
+    ones = jnp.ones((W,), jnp.float32)
+
+    def agg(fn, *args):
+        with shd.use_layout(lay):
+            return fn(stacked, *args)
+
+    masked = jax.jit(lambda: agg(collectives.masked_grad_mean, ones))()
+    sync = jax.jit(lambda: agg(collectives.grad_mean))()
+    check("all-ones psum == full-sync psum_mean (bitwise)",
+          all(bool(jnp.all(a == b)) for a, b in
+              zip(jax.tree.leaves(masked), jax.tree.leaves(sync))))
+
+print("mask_agg_check:", "FAIL" if failures else "OK", failures)

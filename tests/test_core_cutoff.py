@@ -89,6 +89,48 @@ def test_truncated_mean_matches_theory():
     assert abs(s.mean() - 1.5251) < 0.01
 
 
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 64),
+       cut=st.floats(0.2, 4.0), frac=st.floats(0.1, 0.9))
+def test_impute_censored_samples_above_cutoff_and_finite(seed, n, cut, frac):
+    """Property: every imputed entry is finite and >= the observed cutoff
+    time, whatever the predictive moments look like."""
+    rng = np.random.default_rng(seed)
+    observed = rng.uniform(0.1, cut, size=n)
+    finished = rng.uniform(size=n) < frac
+    mu = rng.uniform(0.1, 3.0, size=n)
+    std = rng.uniform(0.0, 1.0, size=n)   # sigma=0 exercises the clamp
+    out = censoring.impute_censored(observed, finished, mu, std, cut, rng)
+    assert np.all(np.isfinite(out))
+    np.testing.assert_array_equal(out[finished], observed[finished])
+    assert np.all(out[~finished] >= cut - 1e-9)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 128),
+       min_frac=st.floats(0.0, 1.0))
+def test_optimal_cutoff_respects_min_frac(seed, n, min_frac):
+    rng = np.random.default_rng(seed)
+    s = rng.lognormal(0.0, 0.5, size=(32, n))
+    c = order_stats.optimal_cutoff(s, min_frac=min_frac)
+    lo = min(int(np.ceil(min_frac * n)), n)
+    assert lo <= c <= n
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500))
+def test_optimal_cutoff_invariant_to_worker_permutation(seed):
+    """The cutoff depends only on order statistics, never on worker
+    identity: permuting the worker axis of the samples changes nothing."""
+    rng = np.random.default_rng(seed)
+    s = rng.lognormal(0.0, 0.4, size=(64, 32))
+    perm = rng.permutation(32)
+    assert (order_stats.optimal_cutoff(s)
+            == order_stats.optimal_cutoff(s[:, perm]))
+    np.testing.assert_allclose(order_stats.throughput_curve(s),
+                               order_stats.throughput_curve(s[:, perm]))
+
+
 def test_impute_censored_only_touches_missing():
     rng = np.random.default_rng(1)
     obs = np.array([1.0, 2.0, 0.0, 0.0])

@@ -46,6 +46,14 @@ def test_dist_collectives_and_layout_rules():
     _run_check([_check_path("dist_check.py")], timeout=600)
 
 
+@pytest.mark.sharded
+def test_mask_agg_paths_equivalent_on_mesh():
+    """mask_agg="psum" == mask_agg="weights" (losses + updates) over 5
+    masked steps on an 8-worker DP mesh; all-ones psum == full sync
+    bitwise."""
+    _run_check([_check_path("mask_agg_check.py")], timeout=900)
+
+
 @pytest.mark.slow
 @pytest.mark.sharded
 def test_perf_knobs_preserve_numerics():

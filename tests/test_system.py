@@ -9,9 +9,12 @@ import pytest
 
 from conftest import reduced_cfg, tiny_batch
 from repro import optim
-from repro.cluster.simulator import ClusterSim
+from repro.cluster.simulator import (ClusterSim, paper_cluster_158,
+                                     tpu_pod_hosts)
 from repro.core import aggregation
-from repro.core.controller import StaticCutoffController
+from repro.core.controller import (CutoffController, FullSyncController,
+                                   StaticCutoffController)
+from repro.core.runtime_model.api import RuntimeModel
 from repro.data.pipeline import SyntheticTokens
 from repro.launch.train import Trainer, make_train_step
 from repro.models import model as M
@@ -133,6 +136,110 @@ def test_trainer_checkpoint_restart_resumes(tmp_path):
     assert tr2.step == 10
     for a, b in zip(params_at_10, jax.tree.leaves(tr2.state["params"])):
         np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# mask_agg="psum" vs "weights": the Trainer runs both, and they agree.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def agg_cfg_and_steps():
+    cfg = reduced_cfg("qwen2-0.5b")
+    opt = optim.adamw(3e-3)
+    steps = {m: jax.jit(make_train_step(cfg, opt, mask_agg=m))
+             for m in ("weights", "psum")}
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    return cfg, steps, init_fn
+
+
+def _agg_trainer(cfg, steps, init_fn, mode, controller, timer):
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16,
+                           global_batch=8, seed=0)
+    tr = Trainer(cfg=cfg, step_fn=steps[mode], data=data,
+                 controller=controller, timer=timer, n_workers=8,
+                 mask_agg=mode)
+    return tr.restore_or_init(init_fn)
+
+
+def test_trainer_mask_agg_paths_agree(agg_cfg_and_steps):
+    """Same controller decisions + data: the explicit psum path and the
+    example-weights path track each other step for step."""
+    cfg, steps, init_fn = agg_cfg_and_steps
+    hists = {}
+    final = {}
+    for mode in ("weights", "psum"):
+        tr = _agg_trainer(cfg, steps, init_fn, mode,
+                          StaticCutoffController(8, cutoff=6),
+                          ClusterSim(n_workers=8, n_nodes=2, seed=5))
+        hists[mode] = tr.run(5)
+        final[mode] = tr.state["params"]
+    for hw, hp in zip(hists["weights"], hists["psum"]):
+        assert abs(hw["loss"] - hp["loss"]) < 1e-4, (hw, hp)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(final["weights"]),
+                              jax.tree.leaves(final["psum"])))
+    assert err < 1e-3, err
+
+
+# ---------------------------------------------------------------------------
+# Seeded end-to-end regression: the DMM controller's wall-clock-to-loss
+# beats static cutoff and full sync on BOTH aggregation paths, on both
+# ClusterSim presets (paper cluster scaled to 8 workers, TPU-pod hosts).
+# ---------------------------------------------------------------------------
+
+
+def _preset_sim(preset, seed):
+    if preset == "paper_cluster_158":
+        return paper_cluster_158(seed, n_workers=8)
+    return tpu_pod_hosts(8, seed=seed)
+
+
+@pytest.fixture(scope="module", params=["paper_cluster_158",
+                                        "tpu_pod_hosts"])
+def fitted_preset(request):
+    trace = _preset_sim(request.param, 0).run(200)
+    rm = RuntimeModel(n_workers=8, lag=10).init(0)
+    rm.fit(trace, steps=200, batch=8, seed=0)
+    return request.param, rm, trace
+
+
+def _clock_to_loss(hist, target):
+    """Simulated wall-clock until the 3-step trailing mean loss reaches
+    ``target`` (inf if never)."""
+    losses = [h["loss"] for h in hist]
+    for i in range(len(losses)):
+        if np.mean(losses[max(0, i - 2):i + 1]) <= target:
+            return hist[i]["clock"]
+    return np.inf
+
+
+@pytest.mark.parametrize("mode", ["weights", "psum"])
+def test_dmm_beats_static_and_sync_wall_clock_to_loss(
+        agg_cfg_and_steps, fitted_preset, mode):
+    cfg, steps, init_fn = agg_cfg_and_steps
+    preset, rm, trace = fitted_preset
+    dmm = CutoffController(rm, k_samples=32, seed=0)
+    dmm.seed_window(trace)
+    hists = {}
+    for name, ctl in [("dmm", dmm),
+                      ("static", StaticCutoffController(8, cutoff=7)),
+                      ("sync", FullSyncController(8))]:
+        tr = _agg_trainer(cfg, steps, init_fn, mode, ctl,
+                          _preset_sim(preset, 9))
+        hists[name] = tr.run(40)
+    # the loss every run must reach: full sync's (smoothed) final loss
+    target = float(np.mean([h["loss"] for h in hists["sync"][-3:]]))
+    t_dmm = _clock_to_loss(hists["dmm"], target)
+    t_static = _clock_to_loss(hists["static"], target)
+    t_sync = _clock_to_loss(hists["sync"], target)
+    assert np.isfinite(t_dmm)
+    assert t_dmm < t_static, (preset, mode, t_dmm, t_static)
+    assert t_dmm < t_sync, (preset, mode, t_dmm, t_sync)
 
 
 # ---------------------------------------------------------------------------
