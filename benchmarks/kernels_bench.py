@@ -61,6 +61,23 @@ def bench_kernels():
     emit("kernel/fused_adam_cpu_ref", us,
          f"tpu_mem_bound_us={stream / HBM_BW * 1e6:.1f}")
 
+    # the optim-level fused backend (optim.adam(fused=True) ->
+    # ops.adam_update_tree) vs the unfused tree-map optimizer, same tree
+    from repro import optim
+    tree_p = {"a": p[: n // 2048], "b": p[n // 2048:]}
+    tree_g = {"a": g2[: n // 2048], "b": g2[n // 2048:]}
+    for label, opt in (("unfused", optim.adam(1e-3)),
+                       ("fused_xla", optim.adam(1e-3, fused=True))):
+        state = opt.init(tree_p)
+
+        def step(pp, st, gg, _opt=opt):
+            ups, st = _opt.update(gg, st, pp)
+            return optim.apply_updates(pp, ups)["a"]
+
+        us = timeit(jax.jit(step), tree_p, state, tree_g, iters=3)
+        emit(f"kernel/adam_tree_{label}", us,
+             f"tpu_mem_bound_us={stream / HBM_BW * 1e6:.1f}")
+
     # masked grad agg: 16 workers x 4M
     g3 = jax.random.normal(ks[2], (16, 4 * 2**20))
     mask = (jnp.arange(16) % 3 != 0).astype(jnp.float32).reshape(16, 1)

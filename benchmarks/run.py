@@ -1,10 +1,12 @@
 """Benchmark entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only agg]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+                                               [--only agg|controller]
 
-``--only agg`` runs just the aggregation-path section (what
-``scripts/ci.sh --bench`` uses); it also writes ``BENCH_agg.json``.
+``--only agg`` / ``--only controller`` run a single section (what
+``scripts/ci.sh --bench`` uses); they also write ``BENCH_agg.json`` /
+``BENCH_controller.json`` respectively.
 """
 import argparse
 import sys
@@ -15,16 +17,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the 2175-worker Cray model + shrink fig4")
-    ap.add_argument("--only", default=None, choices=["agg"],
+    ap.add_argument("--only", default=None, choices=["agg", "controller"],
                     help="run a single benchmark section")
     args = ap.parse_args()
 
-    from benchmarks import agg_bench, kernels_bench, paper_figures, roofline
+    from benchmarks import (agg_bench, controller_bench, kernels_bench,
+                            paper_figures, roofline)
 
     t0 = time.time()
     print("name,us_per_call,derived")
     if args.only == "agg":
         agg_bench.bench_agg(quick=args.quick)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
+    if args.only == "controller":
+        controller_bench.bench_controller(quick=args.quick)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
     paper_figures.bench_elfving_table()
@@ -36,6 +43,7 @@ def main() -> None:
     kernels_bench.bench_kernels()
     roofline.bench_roofline()
     agg_bench.bench_agg(quick=args.quick)
+    controller_bench.bench_controller(quick=args.quick)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -22,7 +22,7 @@ from repro.cluster.simulator import ClusterSim
 from repro.configs.base import get_config
 from repro.core.controller import ElfvingController
 from repro.data.pipeline import SyntheticTokens
-from repro.launch.train import Trainer, make_train_step
+from repro.launch.train import Trainer, jit_train_step
 from repro.models import model as M
 
 CKPT = "/tmp/repro_ft_demo"
@@ -46,7 +46,7 @@ def make_trainer(cfg, n_workers, timer):
     data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
                            global_batch=24, seed=0)
     opt = optim.adamw(3e-3)
-    step = jax.jit(make_train_step(cfg, opt))
+    step = jit_train_step(cfg, opt)
     tr = Trainer(cfg=cfg, step_fn=step, data=data,
                  controller=ElfvingController(n_workers, warmup=3),
                  timer=timer, n_workers=n_workers, ckpt_dir=CKPT,

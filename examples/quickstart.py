@@ -16,7 +16,7 @@ from repro.configs.base import get_config
 from repro.core.controller import CutoffController
 from repro.core.runtime_model.api import RuntimeModel
 from repro.data.pipeline import SyntheticTokens
-from repro.launch.train import Trainer, make_train_step
+from repro.launch.train import Trainer, jit_train_step
 from repro.models import model as M
 
 
@@ -39,7 +39,7 @@ def main():
     data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
                            global_batch=16, seed=0)
     opt = optim.adamw(optim.cosine_schedule(3e-3, 10, 200))
-    step = jax.jit(make_train_step(cfg, opt))
+    step = jit_train_step(cfg, opt)
     tr = Trainer(cfg=cfg, step_fn=step, data=data, controller=ctl,
                  timer=ClusterSim(n_workers=n_workers, n_nodes=2, seed=7),
                  n_workers=n_workers)

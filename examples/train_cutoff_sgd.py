@@ -20,7 +20,7 @@ from repro.configs.base import ArchConfig, get_config
 from repro.core.controller import CutoffController, FullSyncController
 from repro.core.runtime_model.api import RuntimeModel
 from repro.data.pipeline import SyntheticTokens
-from repro.launch.train import Trainer, make_train_step
+from repro.launch.train import Trainer, jit_train_step
 from repro.models import model as M
 
 
@@ -68,8 +68,7 @@ def main():
                            global_batch=args.batch, seed=0)
     opt = optim.clip_by_global_norm(
         optim.adamw(optim.cosine_schedule(3e-4, 50, args.steps)), 1.0)
-    step = jax.jit(make_train_step(cfg, opt, mask_agg=args.mask_agg),
-                   donate_argnums=(0,))
+    step = jit_train_step(cfg, opt, mask_agg=args.mask_agg)
     tr = Trainer(cfg=cfg, step_fn=step, data=data, controller=ctl,
                  timer=ClusterSim(n_workers=args.workers, n_nodes=4, seed=9),
                  n_workers=args.workers, mask_agg=args.mask_agg,

@@ -4,7 +4,8 @@
 #
 #   scripts/ci.sh            # full tier-1 suite
 #   scripts/ci.sh -m "not sharded"   # skip the multi-device subprocess tests
-#   scripts/ci.sh --bench    # aggregation-path perf run -> BENCH_agg.json
+#   scripts/ci.sh --bench    # perf runs -> BENCH_agg.json +
+#                            #              BENCH_controller.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,6 +15,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--bench" ]]; then
     shift
     python -m benchmarks.run --quick --only agg "$@"
+    python -m benchmarks.run --quick --only controller "$@"
     exit 0
 fi
 

@@ -10,16 +10,27 @@ dropped workers are ignored) and ``finished_mask`` marks who reported.
 
 Controllers:
   * CutoffController  — the paper's method: DMM + amortized inference,
-    MC order statistics, censored imputation.
+    MC order statistics, censored imputation.  Two backends:
+    ``backend="device"`` (default, production) keeps the lag window in a
+    device-resident ring buffer; ``observe`` dispatches ONE fused jit
+    (``_fused_observe_decide``: censored-imputation append + guide →
+    transition → emission → sample → sort → argmax → predictive moments)
+    that overlaps the workers' compute, and ``predict_cutoff`` only
+    materializes the int32 — the single host/device sync per step.
+    ``backend="numpy"`` is the float64 host reference the device path is
+    checked against (tests/test_controller_device.py).
   * ElfvingController — the analytic iid-normal "order" baseline (Eq. 3).
   * StaticCutoffController — Chen et al. (2016) fixed cutoff.
   * FullSyncController — waits for everyone.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cutoff import censoring, elfving, order_stats
@@ -74,6 +85,64 @@ class ElfvingController(FullSyncController):
         self.buf.append(t)
 
 
+# ---------------------------------------------------------------------------
+# Device-resident ring-buffer primitives (jitted once, shared by every
+# CutoffController instance — shapes key the jit cache).
+# ---------------------------------------------------------------------------
+
+
+def _append_core(ring, head, obs, mode: str):
+    """Trace-level ring append; ``mode`` picks the imputation.
+
+    "plain": censored entries take the observed cutoff time (warmup
+    fallback, and the full-sync case).  "censored": fused truncated-normal
+    imputation (paper §4.2) — the uniform draw, the inverse-CDF, the
+    where-merge and the ring write all stay on device.
+    """
+    times, mask = obs["times"], obs["mask"]
+    cutoff_time = jnp.max(jnp.where(mask, times, -jnp.inf))
+    if mode == "censored":
+        u = jax.random.uniform(obs["key"], times.shape)
+        row = censoring.impute_censored_jax(times, mask, obs["mu"],
+                                            obs["std"], cutoff_time, u)
+    else:
+        row = jnp.where(mask, times, cutoff_time)
+    return ring.at[head].set(row), (head + 1) % ring.shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _ring_append(ring, head, obs, *, mode: str):
+    return _append_core(ring, head, obs, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "k_samples", "lo"))
+def _fused_observe_decide(params, ring, head, obs, key, norm_scale, *,
+                          mode: str, k_samples: int, lo: int):
+    """ONE jit call for a whole controller iteration on the hot path:
+    flush the deferred observation (imputation included) into the ring,
+    then run the full decision (guide → transition → emission → sample →
+    sort → argmax → predictive moments) on the updated window.  The host
+    uploads one (n,) row + mask and fetches one int32 per SGD step."""
+    if mode != "none":
+        ring, head = _append_core(ring, head, obs, mode)
+    cutoff, samples, pred_mu, pred_std = RuntimeModel._decide_core(
+        params, ring, head, key, norm_scale, k_samples, lo)
+    return ring, head, cutoff, samples, pred_mu, pred_std
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _impute_uniforms(key, n: int):
+    return jax.random.uniform(key, (n,))
+
+
+def _impute_key(seed: int, step: int):
+    """The per-step key both backends draw imputation uniforms from.
+
+    Offset so it can never collide with the prediction keys
+    (``PRNGKey(seed + step)``)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed + 1_000_003), step)
+
+
 @dataclass
 class CutoffController:
     """The paper's dynamic controller (DMM + amortized inference).
@@ -83,57 +152,176 @@ class CutoffController:
       2. c* = argmax_c E[c / x_(c)]  (throughput-optimal cutoff),
       3. after the step, impute censored runtimes from the predictive
          distribution left-truncated at the observed cutoff time (§4.2).
+
+    ``backend="device"`` (default): the window lives in a (lag+1, n) f32
+    device ring buffer; ``observe`` uploads one (n,) row and dispatches
+    the fused append+decide jit for the next step, and ``predict_cutoff``
+    materializes a single int32.  ``backend="numpy"``: the float64 host
+    reference.  Both
+    consume the same jax-derived uniform stream for imputation, so their
+    cutoff sequences are identical and their windows agree to f32 precision
+    on seeded runs.
     """
     model: RuntimeModel
     k_samples: int = 64
     min_frac: float = 0.5
     seed: int = 0
+    backend: str = "device"
 
-    _window: list = field(default_factory=list)
+    _window: list = field(default_factory=list)       # numpy backend
+    _ring: Optional[jax.Array] = None                 # device backend
+    _head: Optional[jax.Array] = None
+    _count: int = 0
     _pending_pred: Optional[tuple] = None
+    _pending_decision: Optional[tuple] = None         # (step, c, s, mu, std)
     _step: int = 0
 
     def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+        if self.backend not in ("device", "numpy"):
+            raise ValueError(f"unknown backend {self.backend!r}")
 
     @property
     def n(self) -> int:
         return self.model.n_workers
 
     @property
+    def _cap(self) -> int:
+        return self.model.lag + 1
+
+    @property
     def warmed_up(self) -> bool:
-        return len(self._window) >= self.model.lag + 1
+        if self.backend == "numpy":
+            return len(self._window) >= self._cap
+        return self._count >= self._cap
+
+    # -- window plumbing ------------------------------------------------
+    def _ensure_ring(self):
+        if self._ring is None:
+            self._ring = jnp.zeros((self._cap, self.n), jnp.float32)
+            self._head = jnp.zeros((), jnp.int32)
+
+    def window_array(self) -> np.ndarray:
+        """The current lag window, oldest row first, as a numpy array."""
+        if self.backend == "numpy":
+            return np.stack(self._window[-self._cap:])
+        self._ensure_ring()
+        w = np.asarray(jnp.roll(self._ring, -self._head, axis=0))
+        return w[-self._count:] if self._count < self._cap else w
 
     def seed_window(self, traces: np.ndarray):
         """Warm-start the lag window from recorded traces."""
-        for row in np.asarray(traces)[-(self.model.lag + 1):]:
-            self._window.append(np.asarray(row, np.float64))
+        rows = np.asarray(traces)[-self._cap:]
+        if self.backend == "numpy":
+            for row in rows:
+                self._window.append(np.asarray(row, np.float64))
+            return
+        self._ensure_ring()
+        self._pending_decision = None
+        full = jnp.ones((self.n,), bool)
+        for row in rows:
+            obs = {"times": jnp.asarray(row, jnp.float32), "mask": full}
+            self._ring, self._head = _ring_append(self._ring, self._head,
+                                                  obs, mode="plain")
+            self._count = min(self._count + 1, self._cap)
 
+    def _dispatch_decision(self, obs, mode: str, step: int):
+        """Issue the fused observe+decide for ``step`` (async dispatch —
+        nothing blocks until the cutoff scalar is read)."""
+        lo = order_stats.min_frac_floor(self.n, self.min_frac)
+        (self._ring, self._head, cutoff, samples, pred_mu,
+         pred_std) = _fused_observe_decide(
+            self.model.params, self._ring, self._head, obs,
+            jax.random.PRNGKey(self.seed + step),
+            jnp.float32(self.model.norm_scale), mode=mode,
+            k_samples=self.k_samples, lo=lo)
+        self._pending_decision = (step, cutoff, samples, pred_mu, pred_std)
+
+    # -- decision -------------------------------------------------------
     def predict_cutoff(self) -> int:
         self._step += 1
         if not self.warmed_up:
             self._pending_pred = None
             return self.n
-        w = np.stack(self._window[-(self.model.lag + 1):])
-        samples, mu, std = self.model.predict_next(
-            w, self.k_samples, seed=self.seed + self._step)
-        # per-worker predictive moments (for censoring) from the MC samples
-        self._pending_pred = (
-            mu.mean(axis=0),
-            np.sqrt(std.mean(axis=0) ** 2 + mu.var(axis=0)))
-        return order_stats.optimal_cutoff(samples, self.min_frac)
+        if self.backend == "numpy":
+            w = np.stack(self._window[-self._cap:])
+            samples, mu, std = self.model.predict_next(
+                w, self.k_samples, seed=self.seed + self._step)
+            # per-worker predictive moments (for censoring) from MC samples
+            self._pending_pred = (
+                mu.mean(axis=0),
+                np.sqrt(std.mean(axis=0) ** 2 + mu.var(axis=0)),
+                samples)
+            return order_stats.optimal_cutoff(samples, self.min_frac)
+        if (self._pending_decision is None
+                or self._pending_decision[0] != self._step):
+            # no decision in flight for this step (first decision after
+            # warmup/seeding, or out-of-cadence call): dispatch one now
+            self._dispatch_decision(None, "none", self._step)
+        _, cutoff, samples, pred_mu, pred_std = self._pending_decision
+        self._pending_decision = None
+        self._pending_pred = (pred_mu, pred_std, samples)
+        # the ONLY host/device sync on the decision path: one int32
+        return int(cutoff)
 
     def predicted_order_stats(self):
-        """(mean, std) of predicted order statistics for the next step."""
+        """(mean, std) of predicted order statistics for the next step.
+
+        Reuses the samples already drawn by the preceding
+        ``predict_cutoff`` (cached on ``_pending_pred``) so diagnostics
+        never double the inference cost.  ``observe`` invalidates the
+        sample cache (the window changed), so a call after it falls back
+        to a fresh prediction over the updated window — the pre-cache
+        behavior.
+        """
         if not self.warmed_up:
             return None
-        w = np.stack(self._window[-(self.model.lag + 1):])
-        samples, _, _ = self.model.predict_next(
-            w, self.k_samples, seed=self.seed + self._step)
+        if self._pending_pred is not None and self._pending_pred[2] is not None:
+            samples = np.asarray(self._pending_pred[2])
+        else:
+            w = self.window_array()
+            samples, _, _ = self.model.predict_next(
+                w, self.k_samples, seed=self.seed + self._step)
         return order_stats.mc_order_stats(samples)
 
+    # -- observation ----------------------------------------------------
     def observe(self, times, finished_mask=None):
+        if self.backend == "numpy":
+            return self._observe_numpy(times, finished_mask)
+        self._ensure_ring()
+        t = jnp.asarray(np.asarray(times, np.float32))
+        mask = (jnp.ones(t.shape, bool) if finished_mask is None
+                else jnp.asarray(np.asarray(finished_mask, bool)))
+        all_finished = finished_mask is None or bool(np.all(finished_mask))
+        if self._pending_pred is None or all_finished:
+            # full sync, or warmup before any prediction exists
+            obs, mode = {"times": t, "mask": mask}, "plain"
+        else:
+            pred_mu, pred_std, _ = self._pending_pred
+            obs = {"times": t, "mask": mask, "mu": pred_mu, "std": pred_std,
+                   "key": _impute_key(self.seed, self._step)}
+            mode = "censored"
+        if self._pending_pred is not None:
+            # the moments stay valid for a repeated observe; the sample
+            # cache does not survive a window change
+            self._pending_pred = self._pending_pred[:2] + (None,)
+        self._count = min(self._count + 1, self._cap)
+        if self.warmed_up:
+            # pipeline: fuse this append (imputation included) with the
+            # NEXT step's decision and dispatch it now — the PS inference
+            # runs while the workers compute, so the next predict_cutoff
+            # only fetches a scalar (paper §1: the controller must decide
+            # faster than the workers step)
+            self._dispatch_decision(obs, mode, self._step + 1)
+        else:
+            self._ring, self._head = _ring_append(self._ring, self._head,
+                                                  obs, mode=mode)
+
+    def _observe_numpy(self, times, finished_mask=None):
         t = np.asarray(times, np.float64)
+        if self._pending_pred is not None:
+            # moments stay valid for a repeated observe; the sample cache
+            # does not survive a window change
+            self._pending_pred = self._pending_pred[:2] + (None,)
         if finished_mask is None or bool(np.all(finished_mask)):
             self._window.append(t)
             return
@@ -143,7 +331,9 @@ class CutoffController:
             # warmup fallback: impute with the max observed time
             imputed = np.where(mask, t, cutoff_time)
         else:
-            mu, std = self._pending_pred
+            mu, std = self._pending_pred[0], self._pending_pred[1]
+            u = np.asarray(_impute_uniforms(
+                _impute_key(self.seed, self._step), t.shape[0]), np.float64)
             imputed = censoring.impute_censored(t, mask, mu, std,
-                                                cutoff_time, self._rng)
+                                                cutoff_time, u=u)
         self._window.append(imputed)

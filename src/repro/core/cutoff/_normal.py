@@ -1,11 +1,16 @@
-"""float64 normal CDF / inverse-CDF in pure numpy.
+"""Normal CDF / inverse-CDF: float64 numpy reference + float32 jax twins.
 
 jax on this host truncates to f32; Acklam's rational approximation for the
-inverse normal CDF is accurate to ~1.15e-9 which matches the paper's printed
-figures (E[max] = 2.1063 at n=158).
+inverse normal CDF is accurate to ~1.15e-9 in f64 which matches the paper's
+printed figures (E[max] = 2.1063 at n=158).  The ``*_jax`` twins run the
+same rational approximation in f32 inside jitted device code (controller
+hot path); they agree with the numpy reference to f32 precision away from
+the extreme tails.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 from math import erf
 
@@ -52,3 +57,44 @@ def ndtr(x):
     """Standard normal CDF (vectorized, float64)."""
     x = np.asarray(x, np.float64)
     return 0.5 * (1.0 + np.vectorize(erf)(x / np.sqrt(2.0)))
+
+
+# ---------------------------------------------------------------------------
+# jax twins (f32, jit-safe) — the controller's device-resident decision path.
+# ---------------------------------------------------------------------------
+
+
+def ndtri_jax(p):
+    """Inverse standard normal CDF, Acklam's approximation in jnp.
+
+    Same branch structure as :func:`ndtri`; callers must keep ``p`` inside
+    (0, 1) — in f32 that means clipping at ~1e-7 from either end, not the
+    reference's 1e-12 (which rounds to 0/1 in f32).
+    """
+    p = jnp.asarray(p)
+    plow, phigh = 0.02425, 1 - 0.02425
+
+    lo = p < plow
+    hi = p > phigh
+
+    q = jnp.sqrt(-2.0 * jnp.log(jnp.where(lo, p, 0.5)))
+    out_lo = ((((((_C[0] * q + _C[1]) * q + _C[2]) * q + _C[3]) * q + _C[4])
+               * q + _C[5])
+              / ((((_D[0] * q + _D[1]) * q + _D[2]) * q + _D[3]) * q + 1))
+    q = p - 0.5
+    r = q * q
+    out_mid = ((((((_A[0] * r + _A[1]) * r + _A[2]) * r + _A[3]) * r + _A[4])
+                * r + _A[5]) * q
+               / (((((_B[0] * r + _B[1]) * r + _B[2]) * r + _B[3]) * r
+                   + _B[4]) * r + 1))
+    q = jnp.sqrt(-2.0 * jnp.log(jnp.where(hi, 1.0 - p, 0.5)))
+    out_hi = -((((((_C[0] * q + _C[1]) * q + _C[2]) * q + _C[3]) * q + _C[4])
+                * q + _C[5])
+               / ((((_D[0] * q + _D[1]) * q + _D[2]) * q + _D[3]) * q + 1))
+    return jnp.where(lo, out_lo, jnp.where(hi, out_hi, out_mid))
+
+
+def ndtr_jax(x):
+    """Standard normal CDF in jnp (lax erf)."""
+    x = jnp.asarray(x)
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(jnp.asarray(2.0, x.dtype))))

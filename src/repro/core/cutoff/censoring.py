@@ -8,42 +8,95 @@ time x_(c):
     p(x | x > x_c) = p(x) / int_{x_c}^inf p(x) dx
 
 Sampling via inverse-CDF on the truncated normal.
+
+The numpy reference runs in f64 on the host; ``truncated_normal_sample_jax``
+is the f32 twin the device-resident controller fuses into its jitted observe
+path.  Both accept pre-drawn uniforms ``u`` so the two paths can consume the
+SAME random stream — that is what lets the device/numpy equivalence suite
+demand identical cutoff sequences while the imputed values only differ at
+f32 precision.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cutoff._normal import ndtr as _ndtr, ndtri as _ndtri
+from repro.core.cutoff._normal import (ndtr as _ndtr, ndtr_jax as _ndtr_jax,
+                                       ndtri as _ndtri,
+                                       ndtri_jax as _ndtri_jax)
 
 
+# Both the f64 reference and the f32 device sampler clip the truncation CDF
+# and the effective uniform at the SAME epsilons — chosen representable in
+# f32 (the tighter 1e-9/1e-12 clips of a pure-f64 design round to exactly
+# 0/1 there).  This caps the inverse-CDF at the 1-1e-6 quantile (~4.75
+# sigma above the bound): the two paths then sample the same distribution
+# and the device/numpy equivalence suite can hold them together even
+# through far-tail draws.
+_CDF_CLIP = 1e-6
+_U_CLIP_LO = 1e-7
 
 
-def truncated_normal_sample(mu, sigma, lower, rng) -> np.ndarray:
+def truncated_normal_sample(mu, sigma, lower, rng=None, u=None) -> np.ndarray:
     """Sample x ~ N(mu, sigma^2) | x > lower (elementwise).
 
     Far in the right tail (lower >> mu) the CDF saturates and the
     inverse-CDF draw degenerates, so the result is clamped at ``lower`` —
     the correct limit of the truncated distribution as its mass above the
     bound vanishes.
+
+    Uniforms come from ``u`` when given (shared-stream mode; shape of
+    ``mu``), otherwise from ``rng.uniform``.
     """
     mu = np.asarray(mu, np.float64)
     lower = np.asarray(lower, np.float64)
     sigma = np.maximum(np.asarray(sigma, np.float64), 1e-9)
     a = _ndtr((lower - mu) / sigma)
-    a = np.clip(a, 0.0, 1.0 - 1e-9)
-    u = a + (1.0 - a) * rng.uniform(size=mu.shape)
-    return np.maximum(mu + sigma * _ndtri(np.clip(u, 1e-12, 1 - 1e-12)),
-                      lower)
+    a = np.clip(a, 0.0, 1.0 - _CDF_CLIP)
+    if u is None:
+        u = rng.uniform(size=mu.shape)
+    u = a + (1.0 - a) * np.asarray(u, np.float64)
+    return np.maximum(
+        mu + sigma * _ndtri(np.clip(u, _U_CLIP_LO, 1 - _CDF_CLIP)), lower)
 
 
 def impute_censored(observed: np.ndarray, finished_mask: np.ndarray,
                     pred_mu: np.ndarray, pred_std: np.ndarray,
-                    cutoff_time: float, rng) -> np.ndarray:
+                    cutoff_time: float, rng=None, u=None) -> np.ndarray:
     """Fill unobserved worker runtimes with truncated predictive samples.
 
     observed: (n,) runtimes (garbage where ~finished_mask);
     pred_mu/pred_std: (n,) per-worker predictive moments for THIS iteration.
     """
     imputed = truncated_normal_sample(pred_mu, pred_std,
-                                      np.full_like(pred_mu, cutoff_time), rng)
+                                      np.full_like(pred_mu, cutoff_time),
+                                      rng, u=u)
     return np.where(finished_mask, observed, imputed)
+
+
+# ---------------------------------------------------------------------------
+# jax twins (f32, jit-safe) — fused into the controller's observe path.
+# ---------------------------------------------------------------------------
+
+
+def truncated_normal_sample_jax(mu, sigma, lower, u) -> jnp.ndarray:
+    """f32 twin of :func:`truncated_normal_sample` with explicit uniforms.
+
+    Identical clip epsilons to the reference (module constants above), so
+    both paths sample the same capped-tail distribution; residual
+    differences are f32 arithmetic only.
+    """
+    sigma = jnp.maximum(sigma, 1e-9)
+    a = _ndtr_jax((lower - mu) / sigma)
+    a = jnp.clip(a, 0.0, 1.0 - _CDF_CLIP)
+    uu = a + (1.0 - a) * u
+    x = mu + sigma * _ndtri_jax(jnp.clip(uu, _U_CLIP_LO, 1.0 - _CDF_CLIP))
+    return jnp.maximum(x, lower)
+
+
+def impute_censored_jax(observed, finished_mask, pred_mu, pred_std,
+                        cutoff_time, u) -> jnp.ndarray:
+    """jax twin of :func:`impute_censored` (``cutoff_time`` may be traced)."""
+    imputed = truncated_normal_sample_jax(
+        pred_mu, pred_std, jnp.broadcast_to(cutoff_time, pred_mu.shape), u)
+    return jnp.where(finished_mask, observed, imputed)

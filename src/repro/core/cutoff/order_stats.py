@@ -4,12 +4,30 @@ Throughput of waiting for the fastest c of n workers:  Omega(c) = c / x_(c),
 where x_(c) is the c-th order statistic of the joint runtime vector.  Given K
 predictive samples of the next runtime vector, sort each, average Omega per
 cutoff, argmax.
+
+Two implementations live side by side: the float64 numpy reference (host
+path, easy to audit against the paper) and jit-safe ``*_jax`` twins that run
+the identical sort → curve → argmax logic in f32 on device — the fused
+controller decision (``controller._fused_observe_decide`` →
+``RuntimeModel._decide_core``) calls those so the whole decision is one jit
+with only the scalar cutoff fetched to the host.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
+
+
+def min_frac_floor(n: int, min_frac: float) -> int:
+    """The smallest 0-based index the argmax may pick: c >= min_frac * n.
+
+    Clamped so min_frac=1.0 degenerates to full sync instead of an empty
+    argmax.  Shared by the numpy and jax cutoff implementations so the two
+    paths can never disagree on the search window.
+    """
+    return min(int(np.ceil(min_frac * n)), n - 1)
 
 
 def mc_order_stats(samples: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -33,11 +51,74 @@ def optimal_cutoff(samples: np.ndarray, min_frac: float = 0.0) -> int:
     """
     omega = throughput_curve(samples)
     n = omega.shape[0]
-    # clamp so min_frac=1.0 degenerates to full sync instead of an empty
-    # argmax
-    lo = min(int(np.ceil(min_frac * n)), n - 1)
+    lo = min_frac_floor(n, min_frac)
     c = int(np.argmax(omega[lo:]) + lo) + 1
     return min(c, n)
+
+
+# ---------------------------------------------------------------------------
+# jax twins (f32, jit-safe).
+# ---------------------------------------------------------------------------
+
+
+def sorted_rows_jax(x) -> jnp.ndarray:
+    """Ascending per-row sort via a bitonic network.
+
+    XLA's generic comparator sort is pathologically slow on CPU (tens of
+    ms for a (256, 1024) batch); the bitonic network is O(n log^2 n)
+    compare-exchanges expressed as static gathers + elementwise min/max,
+    which every backend executes well.  The output VALUES are exactly the
+    sorted multiset — bit-identical to ``np.sort`` — which is all the
+    order-statistics math needs (ties carry no identity here).
+    """
+    K, n = x.shape
+    m = 1 << max(n - 1, 0).bit_length()
+    if m != n:
+        x = jnp.pad(x, ((0, 0), (0, m - n)), constant_values=jnp.inf)
+    idx = np.arange(m)
+    ksz = 2
+    while ksz <= m:
+        j = ksz // 2
+        while j >= 1:
+            partner = idx ^ j
+            take_min = (idx < partner) == ((idx & ksz) == 0)
+            xp = x[:, partner]
+            x = jnp.where(take_min[None, :], jnp.minimum(x, xp),
+                          jnp.maximum(x, xp))
+            j //= 2
+        ksz *= 2
+    return x[:, :n]
+
+
+def mc_order_stats_jax(samples) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """samples: (K, n) -> (mean (n,), std (n,)) of each order statistic."""
+    s = sorted_rows_jax(samples)
+    return jnp.mean(s, axis=0), jnp.std(s, axis=0)
+
+
+def throughput_curve_jax(samples) -> jnp.ndarray:
+    """E[Omega(c)] for c = 1..n, from MC samples (K, n)."""
+    s = sorted_rows_jax(samples)
+    c = jnp.arange(1, s.shape[1] + 1, dtype=samples.dtype)
+    return jnp.mean(c[None, :] / jnp.maximum(s, 1e-9), axis=0)
+
+
+def optimal_cutoff_jax_from_floor(samples, lo: int) -> jnp.ndarray:
+    """Throughput argmax restricted to 0-based floor ``lo`` (static int)."""
+    omega = throughput_curve_jax(samples)
+    n = omega.shape[0]
+    c = jnp.argmax(omega[lo:]) + lo + 1
+    return jnp.minimum(c, n).astype(jnp.int32)
+
+
+def optimal_cutoff_jax(samples, min_frac: float = 0.0) -> jnp.ndarray:
+    """argmax_c E[Omega(c)] as a traced int32 scalar (1-based cutoff).
+
+    ``min_frac`` must be a static python float (it shapes the argmax
+    window); everything else traces, so the whole decision jits.
+    """
+    return optimal_cutoff_jax_from_floor(
+        samples, min_frac_floor(samples.shape[1], min_frac))
 
 
 def oracle_cutoff(actual: np.ndarray) -> int:

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
+from repro.core.cutoff import order_stats
 from repro.core.runtime_model import dmm as D
 from repro.core.runtime_model import guide as G
 
@@ -136,3 +137,38 @@ class RuntimeModel:
         return (np.asarray(s) * self.norm_scale,
                 np.asarray(mu) * self.norm_scale,
                 np.asarray(std) * self.norm_scale)
+
+    # ------------------------------------------------------------------
+    # Fused device-resident decision (controller hot path).
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _decide_core(params, ring, head, key, norm_scale, k_samples: int,
+                     lo: int):
+        """guide → transition → emission → sample → sort → argmax → moments
+        over the device-resident ring buffer — the trace-level decision
+        body that ``controller._fused_observe_decide`` jits (together with
+        the deferred ring append).
+
+        ring: (lag+1, n) raw f32 runtime rows, ``head`` (traced int32) the
+        index of the OLDEST row; the window never round-trips to the host.
+        RNG layout mirrors ``_predict`` (split(key, 4), k1/k2/k3) so the
+        samples match the host reference path draw for draw.
+
+        Returns (cutoff int32 scalar, samples (K, n) raw,
+        pred_mu (n,), pred_std (n,) — the aggregated predictive moments the
+        censored-imputation step needs).
+        """
+        window = jnp.roll(ring, -head, axis=0) / norm_scale
+        k1, k2, k3, _ = jax.random.split(key, 4)
+        z_T = G.guide_sample_broadcast(params["guide"], window, k1, k_samples)
+        tmu, tstd = D.transition(params["dmm"], z_T)
+        z_next = tmu + tstd * jax.random.normal(k2, tmu.shape)
+        emu, estd = D.emission(params["dmm"], z_next)     # (K, n)
+        x_next = emu + estd * jax.random.normal(k3, emu.shape)
+        samples = x_next * norm_scale
+        cutoff = order_stats.optimal_cutoff_jax_from_floor(samples, lo)
+        pred_mu = jnp.mean(emu, axis=0) * norm_scale
+        pred_std = jnp.sqrt(jnp.mean(estd, axis=0) ** 2
+                            + jnp.var(emu, axis=0)) * norm_scale
+        return cutoff, samples, pred_mu, pred_std
+

@@ -82,3 +82,63 @@ def guide_sample(guide_params, x_window, key, z0=None):
     _, (zs, mus, stds) = jax.lax.scan(step, z0, (h_left, h_right, keys))
     mv = lambda t: jnp.moveaxis(t, 0, 1)
     return mv(zs), mv(mus), mv(stds)
+
+
+def guide_sample_broadcast(guide_params, x_window, key, k_samples: int):
+    """K posterior samples of z_T for ONE window, sweeping the RNNs once.
+
+    Equivalent to ``guide_sample`` on ``x_window`` broadcast to
+    (k_samples, T, n), restructured for the parameter server's
+    per-decision critical path:
+
+      * the deterministic RNN sweeps produce identical rows for every
+        sample there, so they run at B=1 and only the z-chain (which
+        conditions on the sampled z_{t-1}) carries the K batch — removes
+        the K× sweep compute;
+      * the per-step normals are one batched threefry (same bits as
+        ``normal(keys[t], (K, zd))`` per step);
+      * the z-chain folds the mu and std projections into one matmul via
+        the precomputed ``[W_mu | W_mu @ W_std]`` concatenation —
+        sequential-loop ops are what dominate this path on real hardware,
+        not FLOPs.  The reassociation perturbs samples at f32 rounding
+        scale (~1e-6) relative to ``guide_sample``; the controller
+        equivalence suite pins that down.
+
+    RNG layout (split(key, T), one (K, zd) normal per step) matches
+    ``guide_sample`` draw for draw.
+
+    x_window: (T, n) normalized runtimes.  Returns z_T: (k_samples, zd).
+    """
+    T, n = x_window.shape
+    xt = x_window[:, None, :]                     # (T, 1, n)
+    h_left_all = _rnn_sweep(guide_params["rnn_left"], xt)
+    h_right_all = _rnn_sweep(guide_params["rnn_right"], xt[::-1])[::-1]
+    hidden = h_left_all.shape[-1]
+    zeros = jnp.zeros((1, 1, hidden))
+    # h_left[t] summarizes x_{<t}, h_right[t] summarizes x_{>t}; only the
+    # sum enters h_out, so precompute it once for the whole window
+    h_sum = (jnp.concatenate([zeros, h_left_all[:-1]], axis=0)
+             + jnp.concatenate([h_right_all[1:], zeros], axis=0))
+
+    zd = guide_params["mu"][0]["w"].shape[1]
+    keys = jax.random.split(key, T)
+    eps = jax.vmap(lambda k: jax.random.normal(k, (k_samples, zd)))(keys)
+
+    wz, bz = guide_params["z_proj"][0]["w"], guide_params["z_proj"][0]["b"]
+    wm, bm = guide_params["mu"][0]["w"], guide_params["mu"][0]["b"]
+    ws, bs = guide_params["std"][0]["w"], guide_params["std"][0]["b"]
+    w_cat = jnp.concatenate([wm, wm @ ws], axis=1)   # (hidden, 2*zd)
+    b_cat = jnp.concatenate([bm, bm @ ws + bs])
+
+    z0 = jnp.zeros((k_samples, zd))
+
+    def step(z_prev, inp):
+        hs, e = inp                               # hs: (1, hidden)
+        h_out = (_TANH(z_prev @ wz + bz) + hs) / 3.0
+        ms = h_out @ w_cat + b_cat                # [mu | std_pre]
+        mu, sp = ms[:, :zd], ms[:, zd:]
+        z = mu + (_SOFTPLUS(sp) + 1e-3) * e
+        return z, None
+
+    z_T, _ = jax.lax.scan(step, z0, (h_sum, eps))
+    return z_T

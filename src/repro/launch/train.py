@@ -205,6 +205,20 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
     return train_step
 
 
+def jit_train_step(cfg, optimizer: optim.Optimizer, *, donate: bool = True,
+                   **kwargs):
+    """The one place train steps get jitted: donation-clean by default.
+
+    ``donate=True`` donates argument 0 (the train state), so the params and
+    optimizer moments update in place instead of doubling peak memory every
+    step.  Callers must treat the state they pass in as CONSUMED — rebind to
+    the returned state, never read the old one (the ``Trainer`` does this).
+    ``**kwargs`` forward to :func:`make_train_step`.
+    """
+    return jax.jit(make_train_step(cfg, optimizer, **kwargs),
+                   donate_argnums=(0,) if donate else ())
+
+
 # ---------------------------------------------------------------------------
 # Sharding trees for the train state.
 # ---------------------------------------------------------------------------
@@ -292,6 +306,15 @@ class Trainer:
     with): "weights" expands it to per-example loss weights (production),
     "psum" hands the bit array itself to the explicit per-worker gradient
     combine.
+
+    The hot loop is asynchronous: the train step is dispatched (jax async
+    dispatch) BEFORE the controller's observe/imputation runs, so the
+    parameter server's inference for the next decision overlaps the
+    device's gradient compute; per-step losses are kept as device scalars
+    and only fetched in batches every ``metrics_every`` steps (and at eval
+    / verbose / run-end boundaries).  ``metrics_every=1`` restores the
+    blocking per-step loop (useful for benchmarking the overlap win);
+    ``metrics_every=0`` drains only at boundaries.
     """
     cfg: Any
     step_fn: Callable
@@ -303,11 +326,13 @@ class Trainer:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     keep: int = 3
+    metrics_every: int = 10
 
     state: Dict = None
     step: int = 0
     sim_clock: float = 0.0
     history: list = field(default_factory=list)
+    _pending_metrics: list = field(default_factory=list, repr=False)
 
     def restore_or_init(self, init_state_fn):
         from repro.checkpoint import store
@@ -322,6 +347,12 @@ class Trainer:
         else:
             self.state = init_state_fn()
         return self
+
+    def _drain_metrics(self):
+        """Fetch every pending device-side loss into its history record."""
+        for rec in self._pending_metrics:
+            rec["loss"] = float(rec["loss"])
+        self._pending_metrics.clear()
 
     def run(self, n_steps: int, *, eval_fn=None, eval_every: int = 0,
             verbose: bool = False):
@@ -338,31 +369,38 @@ class Trainer:
             mask = np.zeros(n, np.float32)
             mask[order[:c]] = 1.0
             iter_time = float(times[order[c - 1]])
-            self.controller.observe(times, times <= iter_time + 1e-12)
 
-            batch = self.data.batch(self.step)
-            batch = dict(batch)
+            batch = dict(self.data.batch(self.step))
             if self.mask_agg == "psum":
                 batch["mask"] = jnp.asarray(mask)
             else:
                 batch["weights"] = collectives.example_weights(
                     mask, batch["tokens"].shape[0])
+            # dispatch the train step FIRST (async), then run the PS's
+            # observe/imputation so controller inference overlaps compute
             self.state, metrics = self.step_fn(self.state, batch)
+            self.controller.observe(times, times <= iter_time + 1e-12)
             self.step += 1
             self.sim_clock += iter_time
             rec = {"step": self.step, "clock": self.sim_clock, "c": c,
                    "iter_time": iter_time,
-                   "loss": float(metrics["loss"])}
-            if eval_fn and eval_every and self.step % eval_every == 0:
-                rec["eval"] = float(eval_fn(self.state))
+                   "loss": metrics["loss"]}   # device scalar, drained later
             self.history.append(rec)
+            self._pending_metrics.append(rec)
+            if self.metrics_every and self.step % self.metrics_every == 0:
+                self._drain_metrics()
+            if eval_fn and eval_every and self.step % eval_every == 0:
+                self._drain_metrics()
+                rec["eval"] = float(eval_fn(self.state))
             if verbose and self.step % 20 == 0:
+                self._drain_metrics()
                 print(f"  step {self.step}: loss={rec['loss']:.4f} c={c}/{n}"
                       f" t={iter_time:.3f}s clock={self.sim_clock:.1f}s")
             if ckpt and self.step % self.ckpt_every == 0:
                 ckpt.save(self.step, {
                     "state": self.state,
                     "meta": {"step": self.step, "clock": self.sim_clock}})
+        self._drain_metrics()
         if ckpt:
             ckpt.wait()
         return self.history

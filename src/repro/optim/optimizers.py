@@ -73,14 +73,36 @@ def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False
 
 
 def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
-         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+         eps: float = 1e-8, weight_decay: float = 0.0, *,
+         fused: bool = False) -> Optimizer:
+    """Adam(W).  ``fused=True`` routes the whole moment-and-param update
+    through ``kernels.ops.adam_update_tree`` — the Pallas one-HBM-pass
+    kernel on TPU, with the pure-jnp reference under the default ``"xla"``
+    kernel backend.  Matches the unfused path allclose (the fused kernel
+    computes p' directly, so the returned "update" is p' - p up to one
+    rounding)."""
     def init(params):
         z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
         return {"step": jnp.zeros((), jnp.int32),
                 "m": jax.tree.map(z, params),
                 "v": jax.tree.map(z, params)}
 
+    def fused_update(grads, state, params):
+        from repro.kernels import ops
+        if params is None:
+            raise ValueError("adam(fused=True) needs params at update time")
+        lr_t = _lr_at(lr, state["step"])
+        p_new, m, v = ops.adam_update_tree(
+            params, grads, state["m"], state["v"], state["step"], lr_t,
+            b1=b1, b2=b2, eps=eps, wd=weight_decay)
+        ups = jax.tree.map(
+            lambda pn, p: pn.astype(jnp.float32) - p.astype(jnp.float32),
+            p_new, params)
+        return ups, {"step": state["step"] + 1, "m": m, "v": v}
+
     def update(grads, state, params=None):
+        if fused:
+            return fused_update(grads, state, params)
         step = state["step"] + 1
         lr_t = _lr_at(lr, state["step"])
         m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
@@ -107,8 +129,9 @@ def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
 
 
 def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
-          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
-    return adam(lr, b1, b2, eps, weight_decay)
+          eps: float = 1e-8, weight_decay: float = 0.01, *,
+          fused: bool = False) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay, fused=fused)
 
 
 def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:

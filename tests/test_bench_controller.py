@@ -1,0 +1,58 @@
+"""BENCH_controller.json schema guard.
+
+Runs ``benchmarks.controller_bench.bench_controller`` at minimum size and
+asserts the machine-readable output keeps the ``bench_controller/v1``
+contract the perf-trajectory tooling consumes.  This is a schema smoke
+test, not a perf assertion — timings on a loaded CI box are noise.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    from benchmarks.controller_bench import bench_controller
+
+    out = tmp_path_factory.mktemp("bench") / "BENCH_controller.json"
+    bench_controller(quick=True, out_path=str(out), n_list=(8,),
+                     k_list=(8,), decision_iters=2, trainer_steps=2,
+                     trainer_workers=8)
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_bench_controller_schema(bench_json):
+    assert bench_json["schema"] == "bench_controller/v1"
+    rows = bench_json["decision"]
+    assert rows, "decision section empty"
+    for row in rows:
+        for key in ("n_workers", "k_samples", "numpy_us", "device_us",
+                    "speedup", "numpy_blocked_us", "device_blocked_us",
+                    "blocked_speedup"):
+            assert key in row, key
+        assert row["numpy_us"] > 0 and row["device_us"] > 0
+        assert row["numpy_blocked_us"] > 0 and row["device_blocked_us"] > 0
+    tr = bench_json["trainer"]
+    for key in ("sync_steps_per_s", "async_steps_per_s", "async_over_sync",
+                "n_workers", "steps", "arch"):
+        assert key in tr, key
+    assert tr["sync_steps_per_s"] > 0 and tr["async_steps_per_s"] > 0
+
+
+def test_committed_bench_controller_matches_schema():
+    """The checked-in BENCH_controller.json (the perf trajectory's second
+    datapoint) must exist and carry the same schema."""
+    path = Path(__file__).resolve().parent.parent / "BENCH_controller.json"
+    assert path.exists(), "BENCH_controller.json not committed"
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema"] == "bench_controller/v1"
+    combos = {(r["n_workers"], r["k_samples"]) for r in data["decision"]}
+    for n in (8, 158, 1024):
+        for k in (64, 256):
+            assert (n, k) in combos, (n, k)

@@ -1,0 +1,199 @@
+"""Device-resident controller == numpy reference controller.
+
+The tentpole contract of the fused decision path: over a seeded
+paper_cluster_158 run the device controller (ring buffer + one fused jit
+per decision + fused censored imputation) must produce the IDENTICAL
+cutoff sequence as the float64 numpy reference, and the two lag windows
+must agree to f32 precision.  Plus jax-vs-numpy unit parity for the cutoff
+math the fused path reimplements (throughput argmax, MC order stats,
+truncated-normal sampling).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.simulator import paper_cluster_158
+from repro.core.controller import CutoffController
+from repro.core.cutoff import censoring, order_stats
+from repro.core.runtime_model.api import RuntimeModel
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# jax-vs-numpy unit parity for the cutoff math.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 128),
+       min_frac=st.floats(0.0, 1.0))
+def test_optimal_cutoff_jax_parity(seed, n, min_frac):
+    """The f32 device argmax picks the same cutoff as the f64 reference —
+    or, on a genuine near-tie below f32 resolution, one whose expected
+    throughput is indistinguishable from the reference optimum."""
+    rng = np.random.default_rng(seed)
+    s = rng.lognormal(0.0, 0.5, size=(32, n)).astype(np.float32)
+    c_np = order_stats.optimal_cutoff(s, min_frac=min_frac)
+    c_jax = int(order_stats.optimal_cutoff_jax(jnp.asarray(s),
+                                               min_frac=min_frac))
+    lo = order_stats.min_frac_floor(n, min_frac)
+    assert lo + 1 <= c_jax <= n
+    if c_jax != c_np:
+        omega = order_stats.throughput_curve(s)
+        np.testing.assert_allclose(omega[c_jax - 1], omega[c_np - 1],
+                                   rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(8, 128))
+def test_mc_order_stats_jax_parity(seed, n):
+    rng = np.random.default_rng(seed)
+    s = rng.exponential(1.0, size=(64, n)).astype(np.float32)
+    mean_np, std_np = order_stats.mc_order_stats(s)
+    mean_j, std_j = order_stats.mc_order_stats_jax(jnp.asarray(s))
+    np.testing.assert_allclose(mean_j, mean_np, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(std_j, std_np, rtol=1e-4, atol=1e-5)
+    assert np.all(np.diff(np.asarray(mean_j)) >= -1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), cut=st.floats(0.5, 3.0))
+def test_truncated_normal_jax_respects_lower_bound(seed, cut):
+    """Property reuse from test_core_cutoff: every draw >= the bound."""
+    u = np.asarray(jax.random.uniform(jax.random.PRNGKey(seed), (200,)))
+    s = censoring.truncated_normal_sample_jax(
+        jnp.zeros(200), jnp.ones(200), jnp.full(200, cut), jnp.asarray(u))
+    s = np.asarray(s)
+    assert np.all(np.isfinite(s))
+    assert np.all(s >= cut - 1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), cut=st.floats(-1.0, 2.5))
+def test_truncated_normal_jax_matches_numpy_on_shared_uniforms(seed, cut):
+    """Same uniform stream -> the f32 device sampler tracks the f64
+    reference wherever f32 can represent the quantile; in the saturated
+    far tail (truncation CDF or effective uniform within 1e-5 of 1, where
+    the two paths clip at different epsilons) both must still sit within
+    a few sigma above the bound."""
+    from repro.core.cutoff._normal import ndtr
+
+    u = np.asarray(jax.random.uniform(jax.random.PRNGKey(seed), (256,)))
+    mu = np.linspace(0.5, 2.0, 256)
+    sigma = np.linspace(0.05, 0.8, 256)
+    lower = np.full(256, cut)
+    want = censoring.truncated_normal_sample(mu, sigma, lower, u=u)
+    got = np.asarray(censoring.truncated_normal_sample_jax(
+        jnp.asarray(mu, jnp.float32), jnp.asarray(sigma, jnp.float32),
+        jnp.asarray(lower, jnp.float32), jnp.asarray(u, jnp.float32)))
+    a = ndtr((lower - mu) / np.maximum(sigma, 1e-9))
+    ueff = a + (1 - a) * u
+    bulk = ueff < 1 - 1e-5
+    np.testing.assert_allclose(got[bulk], want[bulk], rtol=1e-3, atol=1e-3)
+    tail = ~bulk
+    assert np.all(got[tail] >= cut - 1e-5)
+    assert np.all(got[tail] <= np.maximum(want[tail], cut + 8 * sigma[tail]))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 64),
+       cut=st.floats(0.2, 4.0), frac=st.floats(0.1, 0.9))
+def test_impute_censored_jax_properties(seed, n, cut, frac):
+    rng = np.random.default_rng(seed)
+    observed = rng.uniform(0.1, cut, size=n).astype(np.float32)
+    finished = rng.uniform(size=n) < frac
+    mu = rng.uniform(0.1, 3.0, size=n).astype(np.float32)
+    std = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    out = np.asarray(censoring.impute_censored_jax(
+        jnp.asarray(observed), jnp.asarray(finished), jnp.asarray(mu),
+        jnp.asarray(std), jnp.float32(cut), u))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_array_equal(out[finished], observed[finished])
+    assert np.all(out[~finished] >= cut - 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The 100-step seeded equivalence suite on paper_cluster_158.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_158():
+    sim = paper_cluster_158(seed=0)
+    trace = sim.run(60)
+    rm = RuntimeModel(n_workers=158, lag=20).init(0)
+    rm.fit(trace, steps=60, batch=8, seed=0)
+    return rm, trace
+
+
+def test_device_controller_matches_numpy_reference(fitted_158):
+    rm, trace = fitted_158
+    dev = CutoffController(rm, k_samples=32, seed=0, backend="device")
+    ref = CutoffController(rm, k_samples=32, seed=0, backend="numpy")
+    dev.seed_window(trace)
+    ref.seed_window(trace)
+    np.testing.assert_allclose(dev.window_array(), ref.window_array(),
+                               rtol=1e-6, atol=1e-6)
+
+    sim = paper_cluster_158(seed=7)
+    cutoffs, censored_steps = [], 0
+    for step in range(100):
+        c_dev = dev.predict_cutoff()
+        c_ref = ref.predict_cutoff()
+        assert c_dev == c_ref, (step, c_dev, c_ref)
+        cutoffs.append(c_dev)
+        times = sim.step()
+        it = order_stats.iter_time(times, c_dev)
+        mask = times <= it + 1e-12
+        if not mask.all():
+            censored_steps += 1
+        dev.observe(times, mask)
+        ref.observe(times, mask)
+        # the shared clip epsilons (censoring._CDF_CLIP) hold the two
+        # imputation paths together even through far-tail draws; what
+        # remains is f32 arithmetic noise
+        np.testing.assert_allclose(
+            dev.window_array()[-1], ref.window_array()[-1],
+            rtol=2e-3, atol=2e-3, err_msg=f"step {step}")
+    # the run must actually exercise the fused imputation and a dynamic
+    # cutoff for the equivalence to mean anything
+    assert censored_steps >= 50
+    assert len(set(cutoffs)) > 1
+    np.testing.assert_allclose(dev.window_array(), ref.window_array(),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_device_controller_deterministic(fitted_158):
+    rm, trace = fitted_158
+    runs = []
+    for _ in range(2):
+        ctl = CutoffController(rm, k_samples=16, seed=3, backend="device")
+        ctl.seed_window(trace)
+        sim = paper_cluster_158(seed=11)
+        seq = []
+        for _ in range(20):
+            c = ctl.predict_cutoff()
+            times = sim.step()
+            it = order_stats.iter_time(times, c)
+            ctl.observe(times, times <= it + 1e-12)
+            seq.append(c)
+        runs.append(seq)
+    assert runs[0] == runs[1]
+
+
+def test_device_predicted_order_stats_reuses_pending_samples(fitted_158):
+    """The diagnostics call must consume the cached samples from the
+    preceding predict_cutoff, not re-run inference (satellite fix)."""
+    rm, trace = fitted_158
+    ctl = CutoffController(rm, k_samples=16, seed=0, backend="device")
+    ctl.seed_window(trace)
+    ctl.predict_cutoff()
+    cached = np.asarray(ctl._pending_pred[2])
+    mean, std = ctl.predicted_order_stats()
+    want_mean, want_std = order_stats.mc_order_stats(cached)
+    np.testing.assert_allclose(mean, want_mean, rtol=1e-6)
+    np.testing.assert_allclose(std, want_std, rtol=1e-5, atol=1e-7)

@@ -81,12 +81,12 @@ def test_censored_imputation_keeps_window_finite(fitted_model):
         if not mask.all():
             n_censored_steps += 1
         ctl.observe(times, mask)
-        row = ctl._window[-1]
+        row = ctl.window_array()[-1]
         assert row.shape == (N_WORKERS,)
         assert np.all(np.isfinite(row)) and np.all(row > 0)
         # imputed (censored) entries respect the left truncation at the
-        # observed cutoff time
-        assert np.all(row[~mask] >= it - 1e-9)
+        # observed cutoff time (up to f32 ring-buffer rounding)
+        assert np.all(row[~mask] >= it - 1e-5)
     # the race must actually have censored something for this test to mean
     # anything
     assert n_censored_steps > 0

@@ -197,7 +197,7 @@ def test_controller_censoring_keeps_window_full():
         c = ctl.predict_cutoff()
         it = order_stats.iter_time(times, c)
         ctl.observe(times, times <= it + 1e-12)
-    w = np.stack(ctl._window[-5:])
+    w = ctl.window_array()[-5:]
     assert w.shape[1] == 158 and np.all(np.isfinite(w)) and np.all(w > 0)
 
 

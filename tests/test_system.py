@@ -16,7 +16,7 @@ from repro.core.controller import (CutoffController, FullSyncController,
                                    StaticCutoffController)
 from repro.core.runtime_model.api import RuntimeModel
 from repro.data.pipeline import SyntheticTokens
-from repro.launch.train import Trainer, make_train_step
+from repro.launch.train import Trainer, jit_train_step
 from repro.models import model as M
 from repro.serving.engine import ServeEngine
 
@@ -99,7 +99,7 @@ def _make_trainer(cfg, ckpt_dir, n_steps_data_seed=0):
     data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16,
                            global_batch=8, seed=n_steps_data_seed)
     opt = optim.adamw(3e-3)
-    step = jax.jit(make_train_step(cfg, opt))
+    step = jit_train_step(cfg, opt)
     timer = ClusterSim(n_workers=n_workers, n_nodes=2, seed=5)
     tr = Trainer(cfg=cfg, step_fn=step, data=data,
                  controller=StaticCutoffController(n_workers, cutoff=3),
@@ -147,7 +147,7 @@ def test_trainer_checkpoint_restart_resumes(tmp_path):
 def agg_cfg_and_steps():
     cfg = reduced_cfg("qwen2-0.5b")
     opt = optim.adamw(3e-3)
-    steps = {m: jax.jit(make_train_step(cfg, opt, mask_agg=m))
+    steps = {m: jit_train_step(cfg, opt, mask_agg=m)
              for m in ("weights", "psum")}
 
     def init_fn():
