@@ -15,7 +15,6 @@ after ``BENCH_agg.json``.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import time
 
@@ -126,15 +125,9 @@ def _decision_bench(n_list, k_list, iters: int, blocks: int = 4):
 
 
 def _tiny_cfg():
-    """A deliberately small LM so the PS decision path is a visible
-    fraction of the step — the regime the paper's 158-worker cluster
-    actually runs in (sub-second steps, controller on the critical path)."""
-    from repro.configs.base import get_config
+    from repro.configs.base import bench_tiny_config
 
-    cfg = get_config("qwen2-0.5b").reduced()
-    return dataclasses.replace(cfg, n_layers=2, d_model=32, n_heads=2,
-                               n_kv_heads=1, head_dim=16, d_ff=64,
-                               vocab_size=256)
+    return bench_tiny_config()
 
 
 def _trainer_bench(steps: int, n_workers: int, k_samples: int):

@@ -1,0 +1,170 @@
+"""Elastic-membership benchmark: resize overhead + churn-scenario run.
+
+Two sections, both emitted as CSV rows AND into a machine-readable
+``BENCH_elastic.json`` (schema ``bench_elastic/v1``) — the perf
+trajectory's third datapoint after ``BENCH_agg.json`` and
+``BENCH_controller.json``:
+
+  * ``resize`` — wall time of ``CutoffController.resize`` (window remap +
+    ring rebuild) per backend across shrink/grow transitions; this is the
+    synchronous cost every membership change pays on the decision path;
+  * ``churn`` — end-to-end Trainer steps/s over a seeded 8 -> 6 -> 8
+    ``ChurnSim`` schedule with the ``ElasticController`` (fallback +
+    refit) vs full sync, plus the refit wall time the fallback period has
+    to cover and the simulated wall-clock-to-loss ratio.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+RESIZE_NS = (32, 158)
+
+
+def _resize_bench(n_list, repeats: int = 3):
+    from repro.cluster.simulator import paper_cluster_158
+    from repro.core.controller import CutoffController
+    from repro.core.runtime_model.api import RuntimeModel
+
+    rows = []
+    for n in n_list:
+        trace = paper_cluster_158(seed=0, n_workers=n).run(25)
+
+        def model_for(w):
+            rm = RuntimeModel(n_workers=w, lag=20).init(0)
+            rm.norm_scale = float(2.0 * trace[:21].mean())
+            return rm
+
+        n_small = n - max(2, n // 8)
+        models = {n: model_for(n), n_small: model_for(n_small)}
+        for backend in ("device", "numpy"):
+            best = {"shrink": float("inf"), "grow": float("inf")}
+            for _ in range(repeats):
+                ctl = CutoffController(models[n], k_samples=16, seed=0,
+                                       backend=backend)
+                ctl.seed_window(trace)
+                t0 = time.perf_counter()
+                ctl.resize(n_small, model=models[n_small])
+                best["shrink"] = min(best["shrink"],
+                                     (time.perf_counter() - t0) * 1e6)
+                t0 = time.perf_counter()
+                ctl.resize(n, model=models[n])
+                best["grow"] = min(best["grow"],
+                                   (time.perf_counter() - t0) * 1e6)
+            entry = {"n_workers": n, "n_small": n_small, "backend": backend,
+                     "shrink_us": best["shrink"], "grow_us": best["grow"]}
+            emit(f"elastic/resize_shrink_{backend}_n{n}", best["shrink"],
+                 f"{n}->{n_small}")
+            emit(f"elastic/resize_grow_{backend}_n{n}", best["grow"],
+                 f"{n_small}->{n}")
+            rows.append(entry)
+    return rows
+
+
+def _churn_bench(steps: int, refit_steps: int):
+    import jax
+
+    from repro import optim
+    from repro.cluster.simulator import (ChurnEvent, ChurnSim,
+                                         paper_cluster_158)
+    from repro.configs.base import bench_tiny_config
+    from repro.core.controller import ElasticController, FullSyncController
+    from repro.core.runtime_model.api import RuntimeModel
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.train import Trainer, clock_to_loss, jit_train_step
+    from repro.models import model as M
+
+    cfg = bench_tiny_config()
+    n = 8
+    shrink_at, recover_at = steps // 3, 2 * steps // 3
+    trace = paper_cluster_158(seed=0, n_workers=n).run(120)
+    rm = RuntimeModel(n_workers=n, lag=10).init(0)
+    rm.fit(trace, steps=100, batch=8, seed=0)
+    opt = optim.adamw(3e-3)
+    step_fn = jit_train_step(cfg, opt)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    def make_timer():
+        return ChurnSim(paper_cluster_158(seed=5, n_workers=n),
+                        [ChurnEvent(step=shrink_at, kill=(6, 7)),
+                         ChurnEvent(step=recover_at, restore=(6, 7))])
+
+    refit_wall = []
+
+    class TimedElastic(ElasticController):
+        def _fit_model(self, rows, n, seed):
+            t0 = time.perf_counter()
+            model = super()._fit_model(rows, n, seed)
+            refit_wall.append(time.perf_counter() - t0)
+            return model
+
+    runs = {}
+    for name, ctl in [
+            ("elastic", None),
+            ("sync", FullSyncController(n))]:
+        if ctl is None:
+            ctl = TimedElastic(rm, k_samples=32, seed=0,
+                               refit_steps=refit_steps, refit_fresh=3,
+                               fallback_warmup=2)
+            ctl.seed_window(trace[-40:])
+        data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                               global_batch=24, seed=0)
+        tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=ctl,
+                     timer=make_timer(), n_workers=n)
+        tr.restore_or_init(init_fn)
+        tr.run(2)                          # compile the width-8 step
+        t0 = time.perf_counter()
+        tr.run(steps)
+        wall = time.perf_counter() - t0
+        runs[name] = {"tr": tr, "steps_per_s": steps / wall}
+
+    el, sync = runs["elastic"]["tr"], runs["sync"]["tr"]
+    target = float(np.mean([h["loss"] for h in sync.history[-3:]]))
+    clock_to = lambda hist: clock_to_loss(hist, target)
+
+    out = {"arch": f"{cfg.name}/bench_tiny", "n_workers": n, "steps": steps,
+           "shrink_at": shrink_at, "recover_at": recover_at,
+           "elastic_steps_per_s": runs["elastic"]["steps_per_s"],
+           "sync_steps_per_s": runs["sync"]["steps_per_s"],
+           "refit_s": refit_wall, "n_refits": len(refit_wall),
+           "clock_to_loss_elastic": clock_to(el.history),
+           "clock_to_loss_sync": clock_to(sync.history)}
+    emit("elastic/churn_elastic_steps_per_s",
+         1e6 / out["elastic_steps_per_s"],
+         f"{out['elastic_steps_per_s']:.2f} steps/s")
+    emit("elastic/churn_sync_steps_per_s", 1e6 / out["sync_steps_per_s"],
+         f"{out['sync_steps_per_s']:.2f} steps/s")
+    for i, s in enumerate(refit_wall):
+        emit(f"elastic/refit_{i}_s", s * 1e6, "DMM refit wall time")
+    fmt = lambda v: "n/a" if v is None else f"{v:.1f}s"
+    emit("elastic/churn_clock_to_loss", 0.0,
+         f"elastic={fmt(out['clock_to_loss_elastic'])};"
+         f"sync={fmt(out['clock_to_loss_sync'])}")
+    return out
+
+
+def bench_elastic(quick: bool = False, out_path: str = "BENCH_elastic.json",
+                  n_list=RESIZE_NS, churn_steps: int = None,
+                  refit_steps: int = None):
+    steps = churn_steps if churn_steps is not None else (36 if quick else 45)
+    rsteps = refit_steps if refit_steps is not None else (
+        30 if quick else 60)
+    results = {
+        "schema": "bench_elastic/v1",
+        "quick": quick,
+        "resize": _resize_bench(n_list),
+        "churn": _churn_bench(steps, rsteps),
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("elastic/json_written", 0.0, out_path)
+    return results

@@ -2,11 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
-                                               [--only agg|controller]
+                                               [--only agg|controller|elastic]
 
-``--only agg`` / ``--only controller`` run a single section (what
-``scripts/ci.sh --bench`` uses); they also write ``BENCH_agg.json`` /
-``BENCH_controller.json`` respectively.
+``--only agg`` / ``--only controller`` / ``--only elastic`` run a single
+section (what ``scripts/ci.sh --bench`` uses); they also write
+``BENCH_agg.json`` / ``BENCH_controller.json`` / ``BENCH_elastic.json``
+respectively.
 """
 import argparse
 import sys
@@ -17,12 +18,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the 2175-worker Cray model + shrink fig4")
-    ap.add_argument("--only", default=None, choices=["agg", "controller"],
+    ap.add_argument("--only", default=None,
+                    choices=["agg", "controller", "elastic"],
                     help="run a single benchmark section")
     args = ap.parse_args()
 
-    from benchmarks import (agg_bench, controller_bench, kernels_bench,
-                            paper_figures, roofline)
+    from benchmarks import (agg_bench, controller_bench, elastic_bench,
+                            kernels_bench, paper_figures, roofline)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -32,6 +34,10 @@ def main() -> None:
         return
     if args.only == "controller":
         controller_bench.bench_controller(quick=args.quick)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
+    if args.only == "elastic":
+        elastic_bench.bench_elastic(quick=args.quick)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
     paper_figures.bench_elfving_table()
@@ -44,6 +50,7 @@ def main() -> None:
     roofline.bench_roofline()
     agg_bench.bench_agg(quick=args.quick)
     controller_bench.bench_controller(quick=args.quick)
+    elastic_bench.bench_elastic(quick=args.quick)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -6,9 +6,11 @@ elastic resize.
    the controller window and data cursor come back too).
 3. Kill one worker permanently: the cutoff controller routes around it
    within one step (the paper's mechanism doubling as fault tolerance).
-4. Elastic resize 8 -> 6 workers: the same checkpoint restores onto the
-   smaller cluster (arrays are saved mesh-agnostically), the Elfving
-   fallback covers cutoffs until the DMM is refit for the new shape.
+4. Elastic resize mid-run, 8 -> 6 -> 8 workers (``ChurnSim``): the SAME
+   trainer keeps stepping across both membership changes — the controller
+   window is remapped (survivors column-exact), the checkpoint records the
+   degraded membership, and the restored run resumes at the checkpoint's
+   worker count.
 
   PYTHONPATH=src python examples/fault_tolerance_demo.py
 """
@@ -18,7 +20,7 @@ import jax
 import numpy as np
 
 from repro import optim
-from repro.cluster.simulator import ClusterSim
+from repro.cluster.simulator import ChurnEvent, ChurnSim, ClusterSim
 from repro.configs.base import get_config
 from repro.core.controller import ElfvingController
 from repro.data.pipeline import SyntheticTokens
@@ -84,11 +86,27 @@ def main():
           f"dead worker; iteration time stays bounded)")
     assert max(h["iter_time"] for h in tr3.history[-5:]) < 100
 
-    print("\n=== phase 4: elastic resize 8 -> 6 workers ===")
-    tr4 = make_trainer(cfg, 6, ClusterSim(n_workers=6, n_nodes=2, seed=2))
-    print(f"restored step {tr4.step} onto 6 workers "
-          f"(mesh-agnostic checkpoint)")
-    tr4.run(10, verbose=True)
+    print("\n=== phase 4: elastic resize 8 -> 6 -> 8 workers, mid-run ===")
+    shutil.rmtree(CKPT, ignore_errors=True)
+    churn = ChurnSim(ClusterSim(n_workers=8, n_nodes=2, seed=2),
+                     [ChurnEvent(step=6, kill=(6, 7)),
+                      ChurnEvent(step=14, restore=(6, 7))])
+    tr4 = make_trainer(cfg, 8, churn)
+    tr4.run(20, verbose=True)
+    widths = [h["n"] for h in tr4.history]
+    print(f"worker counts over the run: {widths}")
+    assert 6 in widths and widths[-1] == 8
+    # the checkpoint written while degraded carries the 6-wide membership
+    from repro.checkpoint import store
+    grp = store.restore_group(CKPT, "ctl", step=10)
+    print(f"step-10 checkpoint membership: n={int(grp['n'])} "
+          f"members={grp['members'].tolist()}")
+    tr5 = make_trainer(cfg, 8, ChurnSim(ClusterSim(n_workers=8, n_nodes=2,
+                                                   seed=3),
+                                        [ChurnEvent(step=0, kill=(6, 7))]))
+    print(f"restart from the latest checkpoint: step {tr5.step}, "
+          f"n_workers {tr5.n_workers}")
+    tr5.run(5, verbose=True)
     print("\nall phases OK")
 
 

@@ -5,7 +5,8 @@
 #   scripts/ci.sh            # full tier-1 suite
 #   scripts/ci.sh -m "not sharded"   # skip the multi-device subprocess tests
 #   scripts/ci.sh --bench    # perf runs -> BENCH_agg.json +
-#                            #              BENCH_controller.json
+#                            #              BENCH_controller.json +
+#                            #              BENCH_elastic.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,6 +17,7 @@ if [[ "${1:-}" == "--bench" ]]; then
     shift
     python -m benchmarks.run --quick --only agg "$@"
     python -m benchmarks.run --quick --only controller "$@"
+    python -m benchmarks.run --quick --only elastic "$@"
     exit 0
 fi
 

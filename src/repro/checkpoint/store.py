@@ -8,9 +8,11 @@ Properties needed at 1000+ node scale, implemented here:
     restore they are device_put with whatever shardings the (possibly
     resized) mesh prescribes → elastic restart;
   * async save — serialization happens on a worker thread off the train loop;
-  * full training state — params, optimizer state, data-pipeline state, RNG,
-    and the cutoff controller's lag window (so straggler prediction resumes
-    warm).
+  * full training state — params, optimizer state, step/clock meta, and the
+    cutoff controller's lag window + worker membership (the Trainer writes
+    them as the flat ``"ctl"`` group; ``restore_group`` reads it back so
+    straggler prediction resumes warm across restarts and elastic resizes —
+    data pipelines are seeded by step and carry no mutable state).
 
 Format: a directory per step holding one .npz per top-level group plus a
 msgpack manifest of the pytree structure.
@@ -82,6 +84,26 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
     return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore_group(ckpt_dir: str, name: str,
+                  step: Optional[int] = None
+                  ) -> Optional[Dict[str, np.ndarray]]:
+    """Load one flat group, or None when the group (or step) is absent.
+
+    Groups saved as flat dicts of arrays round-trip here without an
+    example tree.  The Trainer's controller window/membership group
+    (``"ctl"``) uses this: checkpoints written before the group existed
+    simply lack the file, and restore degrades to a cold controller.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", f"{name}.npz")
+    if not os.path.exists(path):
+        return None
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
 
 
 def restore(ckpt_dir: str, example_state: Dict[str, Any],

@@ -92,6 +92,100 @@ class ClusterSim:
 
 
 # ---------------------------------------------------------------------------
+# Churn layer: elastic worker membership on top of any runtime source.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChurnEvent:
+    """One membership change, keyed on the base simulator's step count.
+
+    ``kill`` / ``restore`` name GLOBAL worker ids (columns of the base
+    sim); ``resize`` is a convenience target width — extra kills come off
+    the highest active ids, restores come back lowest-id first.  The event
+    fires BEFORE the runtimes of iteration ``step`` are drawn, so the
+    step at which it fires already runs at the new width.
+    """
+    step: int
+    kill: Tuple[int, ...] = ()
+    restore: Tuple[int, ...] = ()
+    resize: Optional[int] = None
+
+
+class ChurnSim:
+    """Membership schedule wrapped around a ClusterSim (or TraceReplay).
+
+    The base simulator keeps generating FULL-width joint runtimes — the
+    cluster's phenomenology (node regimes, AR load) is independent of which
+    workers currently hold a lease — and ``step()`` returns only the active
+    columns.  ``n_workers`` / ``active_ids`` reflect the membership of the
+    NEXT ``step()`` (pending events are applied eagerly), so a driver can
+    resize its plumbing before drawing the runtimes of the resized step.
+
+    Survivor columns are therefore column-exact across a resize: worker j's
+    runtime series is the same whether or not its neighbours were killed.
+    """
+
+    def __init__(self, base, events: List[ChurnEvent]):
+        self.base = base
+        self.events = sorted(events, key=lambda e: e.step)
+        self._active = np.ones(base.n_workers, bool)
+        self._ei = 0
+        self._apply_pending()
+
+    def _apply_pending(self):
+        while (self._ei < len(self.events)
+               and self.events[self._ei].step <= self.base.t):
+            ev = self.events[self._ei]
+            self._ei += 1
+            if ev.kill:
+                self._active[list(ev.kill)] = False
+            if ev.restore:
+                self._active[list(ev.restore)] = True
+            if ev.resize is not None:
+                n = int(ev.resize)
+                if not 1 <= n <= self.base.n_workers:
+                    raise ValueError(f"resize target {n} outside "
+                                     f"[1, {self.base.n_workers}]")
+                ids = np.flatnonzero(self._active)
+                if n < ids.size:                  # kill highest active ids
+                    self._active[ids[n:]] = False
+                elif n > ids.size:                # restore lowest dead ids
+                    dead = np.flatnonzero(~self._active)
+                    self._active[dead[: n - ids.size]] = True
+
+    @property
+    def n_workers(self) -> int:
+        self._apply_pending()
+        return int(self._active.sum())
+
+    @property
+    def active_ids(self) -> np.ndarray:
+        """Global worker ids of the active set, ascending."""
+        self._apply_pending()
+        return np.flatnonzero(self._active)
+
+    @property
+    def t(self) -> int:
+        return self.base.t
+
+    def step(self) -> np.ndarray:
+        """Joint runtimes of the CURRENT active set ((n_active,))."""
+        self._apply_pending()
+        active = self._active.copy()
+        return self.base.step()[active]
+
+    def run(self, n_steps: int) -> List[np.ndarray]:
+        """Rows may change width across events, so this returns a list."""
+        return [self.step() for _ in range(n_steps)]
+
+
+def resize_schedule(base, plan: List[Tuple[int, int]]) -> ChurnSim:
+    """ChurnSim from a [(step, n_workers), ...] width plan."""
+    return ChurnSim(base, [ChurnEvent(step=s, resize=n) for s, n in plan])
+
+
+# ---------------------------------------------------------------------------
 # Presets matching the paper's two clusters.
 # ---------------------------------------------------------------------------
 

@@ -219,6 +219,21 @@ def all_archs() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def bench_tiny_config(name: str = "qwen2-0.5b") -> "ArchConfig":
+    """A deliberately tiny LM so the PS decision path is a visible
+    fraction of the train step — the regime the paper's 158-worker
+    cluster runs in (sub-second steps, controller on the critical path).
+    The one config the controller/elastic benches, demos, and the elastic
+    acceptance tests all share.
+    """
+    import dataclasses
+
+    cfg = get_config(name).reduced()
+    return dataclasses.replace(cfg, n_layers=2, d_model=32, n_heads=2,
+                               n_kv_heads=1, head_dim=16, d_ff=64,
+                               vocab_size=256)
+
+
 def _load_all() -> None:
     from repro.configs import (  # noqa: F401
         qwen2_vl_7b, deepseek_moe_16b, phi35_moe, stablelm_3b, gemma3_12b,

@@ -22,10 +22,19 @@ Controllers:
   * ElfvingController — the analytic iid-normal "order" baseline (Eq. 3).
   * StaticCutoffController — Chen et al. (2016) fixed cutoff.
   * FullSyncController — waits for everyone.
+  * ElasticController — membership-elastic wrapper: DMM decisions while
+    the cluster shape matches the fitted model; across a ``resize`` it
+    remaps the window (``remap_columns``), falls back to Elfving, and
+    refits the DMM on the surviving window (src/repro/core/README.md
+    has the full elastic contract).
+
+Every controller implements ``resize(n_workers, col_map=None, model=None)``
+for elastic worker membership; observation width is strict after it.
 """
 from __future__ import annotations
 
 import functools
+import threading
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -47,6 +56,10 @@ class FullSyncController:
     def observe(self, times, finished_mask=None):
         pass
 
+    def resize(self, n_workers: int, col_map=None, model=None):
+        """Elastic membership change: track the new worker count."""
+        self.n = int(n_workers)
+
 
 class StaticCutoffController(FullSyncController):
     """Chen et al. (2016): fixed c < n for the whole run."""
@@ -54,11 +67,22 @@ class StaticCutoffController(FullSyncController):
     def __init__(self, n_workers: int, cutoff: Optional[int] = None,
                  drop_frac: float = 0.06):
         super().__init__(n_workers)
+        self.drop_frac = drop_frac
+        self._cutoff = cutoff        # the configured cutoff, never clamped
         self.c = cutoff if cutoff is not None else max(
             1, int(round(n_workers * (1 - drop_frac))))
 
     def predict_cutoff(self) -> int:
         return self.c
+
+    def resize(self, n_workers: int, col_map=None, model=None):
+        super().resize(n_workers, col_map, model)
+        if self._cutoff is not None:
+            # clamp to the live width but keep the configured value, so a
+            # transient shrink doesn't permanently lower the baseline
+            self.c = min(self._cutoff, self.n)
+        else:
+            self.c = max(1, int(round(self.n * (1 - self.drop_frac))))
 
 
 class ElfvingController(FullSyncController):
@@ -81,8 +105,54 @@ class ElfvingController(FullSyncController):
     def observe(self, times, finished_mask=None):
         t = np.asarray(times, np.float64)
         if finished_mask is not None:
-            t = t[np.asarray(finished_mask, bool)]
+            m = np.asarray(finished_mask, bool)
+            if m.any() and not m.all():
+                # keeping only finished workers' times would give the
+                # running (mu, sigma) survivorship bias once cutoffs
+                # engage (the sample never contains a slow tail), drifting
+                # the Eq. 3 cutoff optimistic.  Impute censored entries at
+                # the observed cutoff time — a lower bound on their true
+                # runtime, and the analytic analogue of §4.2's truncation.
+                t = np.where(m, t, t[m].max())
         self.buf.append(t)
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership: window remapping across worker-set changes.
+# ---------------------------------------------------------------------------
+
+
+def remap_columns(rows: np.ndarray, n_new: int,
+                  col_map: Optional[np.ndarray] = None) -> np.ndarray:
+    """Remap (T, n_old) worker-indexed rows onto a resized worker set.
+
+    ``col_map`` is (n_new,) of old column indices — survivors carry their
+    runtime series over column-exactly — with ``-1`` marking NEW workers,
+    whose column is seeded row-by-row from the cluster mean of the
+    surviving columns (the moment-matched prior before the new worker has
+    reported anything).  Default: identity prefix (old worker i -> new
+    column i, extra columns new).
+    """
+    rows = np.asarray(rows)
+    if rows.ndim != 2:
+        raise ValueError(f"rows must be (T, n), got {rows.shape}")
+    n_old = rows.shape[1]
+    if col_map is None:
+        col_map = np.concatenate([
+            np.arange(min(n_old, n_new)),
+            np.full(max(0, n_new - n_old), -1, int)])
+    col_map = np.asarray(col_map, int)
+    if col_map.shape != (n_new,):
+        raise ValueError(f"col_map must be ({n_new},), got {col_map.shape}")
+    if np.any(col_map >= n_old):
+        raise ValueError(f"col_map references old columns >= {n_old}")
+    surv = col_map[col_map >= 0]
+    fill = (rows[:, surv].mean(axis=1) if surv.size
+            else rows.mean(axis=1))
+    out = np.where((col_map >= 0)[None, :],
+                   rows[:, np.clip(col_map, 0, n_old - 1)],
+                   fill[:, None])
+    return out.astype(rows.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -201,10 +271,19 @@ class CutoffController:
             self._head = jnp.zeros((), jnp.int32)
 
     def window_array(self) -> np.ndarray:
-        """The current lag window, oldest row first, as a numpy array."""
+        """The current lag window, oldest row first, as a numpy array.
+
+        Raises ValueError while the window is empty (both backends — the
+        checkpoint path relies on this to skip cold controllers rather
+        than persist an all-zeros ring).
+        """
         if self.backend == "numpy":
+            if not self._window:
+                raise ValueError("window is empty")
             return np.stack(self._window[-self._cap:])
         self._ensure_ring()
+        if self._count == 0:
+            raise ValueError("window is empty")
         w = np.asarray(jnp.roll(self._ring, -self._head, axis=0))
         return w[-self._count:] if self._count < self._cap else w
 
@@ -223,6 +302,46 @@ class CutoffController:
             self._ring, self._head = _ring_append(self._ring, self._head,
                                                   obs, mode="plain")
             self._count = min(self._count + 1, self._cap)
+
+    def resize(self, n_workers: int, col_map=None,
+               model: Optional[RuntimeModel] = None):
+        """Remap the lag window across a worker-set change.
+
+        Survivor columns (``col_map`` entries >= 0) move column-exactly
+        into the resized ring; NEW workers' columns are seeded from the
+        per-row cluster mean of the survivors (:func:`remap_columns`).
+        ``model`` must be a :class:`RuntimeModel` of the NEW width — the
+        DMM's emission layer is shaped by n_workers, so a resize without a
+        refit model cannot decide.  Callers that need a degraded mode
+        while the refit runs should drive the resize through
+        :class:`ElasticController` instead.
+        """
+        n_new = int(n_workers)
+        model = model if model is not None else self.model
+        if model.n_workers != n_new:
+            raise ValueError(
+                f"resize({n_new}) needs a RuntimeModel of that width, got "
+                f"n_workers={model.n_workers}; refit first or drive the "
+                f"resize through ElasticController")
+        have_rows = (len(self._window) > 0 if self.backend == "numpy"
+                     else self._count > 0)
+        rows = self.window_array() if have_rows else None
+        self.model = model
+        self._pending_decision = None
+        self._pending_pred = None
+        if self.backend == "numpy":
+            self._window = []
+            if rows is not None:
+                remapped = remap_columns(np.asarray(rows, np.float64), n_new,
+                                         col_map)
+                self._window = [row for row in remapped]
+            return
+        self._ring = None
+        self._head = None
+        self._count = 0
+        self._ensure_ring()
+        if rows is not None:
+            self.seed_window(remap_columns(rows, n_new, col_map))
 
     def _dispatch_decision(self, obs, mode: str, step: int):
         """Issue the fused observe+decide for ``step`` (async dispatch —
@@ -246,10 +365,13 @@ class CutoffController:
             w = np.stack(self._window[-self._cap:])
             samples, mu, std = self.model.predict_next(
                 w, self.k_samples, seed=self.seed + self._step)
-            # per-worker predictive moments (for censoring) from MC samples
+            # per-worker predictive moments (for censoring) from MC samples:
+            # the K draws form a Gaussian mixture, so the variance is
+            # E[std^2] + Var[mu] (mixture-variance law) — NOT E[std]^2,
+            # which under-disperses the censored imputation
             self._pending_pred = (
                 mu.mean(axis=0),
-                np.sqrt(std.mean(axis=0) ** 2 + mu.var(axis=0)),
+                np.sqrt(np.mean(std ** 2, axis=0) + mu.var(axis=0)),
                 samples)
             return order_stats.optimal_cutoff(samples, self.min_frac)
         if (self._pending_decision is None
@@ -322,6 +444,9 @@ class CutoffController:
             # moments stay valid for a repeated observe; the sample cache
             # does not survive a window change
             self._pending_pred = self._pending_pred[:2] + (None,)
+        # every read uses only the last lag+1 rows; drop the dead history
+        # (the device backend's ring is O(lag+1) by construction)
+        del self._window[:-self._cap]
         if finished_mask is None or bool(np.all(finished_mask)):
             self._window.append(t)
             return
@@ -337,3 +462,232 @@ class CutoffController:
             imputed = censoring.impute_censored(t, mask, mu, std,
                                                 cutoff_time, u=u)
         self._window.append(imputed)
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership: DMM controller + analytic fallback + refit.
+# ---------------------------------------------------------------------------
+
+
+class ElasticController:
+    """Membership-elastic cutoff controller (DMM + Elfving fallback + refit).
+
+    Wraps the paper's :class:`CutoffController` for clusters whose worker
+    set changes mid-run (rack loss, preemption, node return).  While the
+    cluster shape matches the fitted :class:`RuntimeModel` it delegates
+    every decision to the DMM controller.  Across a :meth:`resize` it:
+
+      1. remaps its window/trace onto the new worker set — survivors
+         column-exact, new workers seeded from the cluster-mean moments
+         (:func:`remap_columns`);
+      2. falls back to the analytic :class:`ElfvingController`
+         (warm-seeded from the remapped window, so Eq. 3 decisions start
+         immediately) — the degraded mode the elastic launch story
+         narrates (``launch/elastic.py``);
+      3. refits the DMM at the new width from the surviving window once
+         ``refit_fresh`` post-resize observations have arrived
+         (synchronously by default; ``refit_async=True`` runs the ELBO
+         fit on a worker thread and swaps the DMM back in on completion),
+         then resumes DMM decisions with the window it kept warm.
+
+    The controller also keeps a rolling imputed trace (plain imputation at
+    the observed cutoff time) as refit training data; ``window_array`` /
+    ``seed_window`` expose its lag-window tail so checkpoints can persist
+    and warm-restore straggler prediction across restarts and resizes.
+    """
+
+    def __init__(self, model: RuntimeModel, *, k_samples: int = 64,
+                 min_frac: float = 0.5, seed: int = 0,
+                 backend: str = "device", history: int = 512,
+                 refit_steps: int = 150, refit_batch: int = 8,
+                 refit_fresh: int = 4, refit_async: bool = False,
+                 fallback_warmup: int = 3):
+        self.k_samples = k_samples
+        self.min_frac = min_frac
+        self.seed = seed
+        self.backend = backend
+        self.history = history
+        self.refit_steps = refit_steps
+        self.refit_batch = refit_batch
+        self.refit_fresh = refit_fresh
+        self.refit_async = refit_async
+        self.fallback_warmup = fallback_warmup
+        # architecture template for refits (widths change, shapes don't)
+        self._lag = model.lag
+        self._z_dim = model.z_dim
+        self._hidden = model.hidden
+        self._n = model.n_workers
+        self._trace: list = []            # imputed full rows, rolling
+        self._fresh = 0                   # post-resize observations
+        self._resize_count = 0
+        # async refit in flight: (thread, result_box, resize generation)
+        self._refit_job: Optional[tuple] = None
+        self.fallback_steps = 0           # observes served by the fallback
+        self._dmm: Optional[CutoffController] = None
+        self._fallback = ElfvingController(self._n,
+                                           warmup=fallback_warmup,
+                                           min_frac=min_frac)
+        self._install_dmm(model)
+
+    # -- bookkeeping ----------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def mode(self) -> str:
+        """"dmm" when the fitted controller decides, "fallback" while a
+        resize awaits its refit."""
+        return "dmm" if self._dmm is not None else "fallback"
+
+    @property
+    def warmed_up(self) -> bool:
+        return len(self._trace) >= self._lag + 1
+
+    def _install_dmm(self, model: RuntimeModel):
+        assert model.n_workers == self._n, (model.n_workers, self._n)
+        ctl = CutoffController(
+            model, k_samples=self.k_samples, min_frac=self.min_frac,
+            seed=self.seed + 101 * self._resize_count, backend=self.backend)
+        rows = self._trace[-(self._lag + 1):]
+        if rows:
+            ctl.seed_window(np.stack(rows))
+        self._dmm = ctl
+
+    def _active(self):
+        return self._dmm if self._dmm is not None else self._fallback
+
+    # -- window persistence (checkpoint contract) -----------------------
+    def window_array(self) -> np.ndarray:
+        """The lag-window tail of the imputed trace, oldest row first."""
+        return np.stack(self._trace[-(self._lag + 1):])
+
+    def seed_window(self, traces: np.ndarray):
+        """Warm-start from recorded rows at the CURRENT width."""
+        rows = [np.asarray(r, np.float64) for r in np.asarray(traces)]
+        if rows and rows[0].shape != (self._n,):
+            raise ValueError(f"seed rows have width {rows[0].shape}, "
+                             f"controller width is {self._n}")
+        self._trace = (self._trace + rows)[-self.history:]
+        for r in rows[-50:]:
+            self._fallback.buf.append(r)
+        if self._dmm is not None:
+            self._dmm.seed_window(np.stack(self._trace[-(self._lag + 1):]))
+
+    # -- decision / observation -----------------------------------------
+    def predict_cutoff(self) -> int:
+        self._poll_refit()
+        return self._active().predict_cutoff()
+
+    def predicted_order_stats(self):
+        if self._dmm is not None:
+            return self._dmm.predicted_order_stats()
+        return None
+
+    def observe(self, times, finished_mask=None):
+        t = np.asarray(times, np.float64)
+        if t.shape != (self._n,):
+            raise ValueError(
+                f"observe got {t.shape[0]} runtimes at width {self._n}; "
+                f"call resize() before observing the resized step")
+        row = t
+        if finished_mask is not None:
+            m = np.asarray(finished_mask, bool)
+            if m.any() and not m.all():
+                # plain imputation at the observed cutoff time is enough
+                # for refit TRAINING data; the active DMM still runs the
+                # truncated-normal imputation for its own window
+                row = np.where(m, t, t[m].max())
+        self._trace = (self._trace + [row])[-self.history:]
+        if self._dmm is None:
+            self.fallback_steps += 1
+        self._active().observe(times, finished_mask)
+        self._fresh += 1
+        self._poll_refit()
+        if self._dmm is None and self._refit_job is None:
+            self._maybe_refit()
+
+    # -- resize protocol -------------------------------------------------
+    def resize(self, n_workers: int, col_map=None,
+               model: Optional[RuntimeModel] = None):
+        """Worker-set change: remap, fall back, schedule the refit.
+
+        ``col_map`` as in :func:`remap_columns`.  If ``model`` (already
+        fitted at the new width) is supplied, the DMM controller resumes
+        immediately; otherwise decisions route through the Elfving
+        fallback until the refit lands.
+        """
+        n_new = int(n_workers)
+        if model is not None and model.n_workers != n_new:
+            raise ValueError(
+                f"resize({n_new}) got a RuntimeModel of width "
+                f"{model.n_workers}; refit it for the new width first")
+        if n_new == self._n and col_map is None and model is None:
+            return
+        # abandon any in-flight refit WITHOUT blocking on its ELBO fit:
+        # the daemon thread keeps filling its orphaned result box, and
+        # _poll_refit discards it by generation
+        self._refit_job = None
+        if self._trace:
+            rows = remap_columns(np.stack(self._trace), n_new, col_map)
+            self._trace = [row for row in rows]
+        self._n = n_new
+        self._resize_count += 1
+        self._fresh = 0
+        self._dmm = None
+        self._fallback = ElfvingController(n_new,
+                                           warmup=self.fallback_warmup,
+                                           min_frac=self.min_frac)
+        for r in self._trace[-50:]:
+            self._fallback.buf.append(r)
+        if model is not None:
+            self._install_dmm(model)
+
+    # -- refit plumbing --------------------------------------------------
+    def _enough_rows(self) -> bool:
+        # RuntimeModel.fit needs strictly more than lag+1 rows; demand a
+        # small margin so the first refit windows aren't degenerate
+        return len(self._trace) >= self._lag + 1 + self.refit_batch
+
+    def _maybe_refit(self):
+        if self._fresh < self.refit_fresh or not self._enough_rows():
+            return
+        # freeze width/seed now: a resize mid-fit must not retarget the
+        # running fit (its result is discarded by generation anyway)
+        rows = np.stack(self._trace)
+        n, seed = self._n, self.seed + self._resize_count
+        if self.refit_async:
+            box: dict = {}
+            gen = self._resize_count
+
+            def work():
+                box["model"] = self._fit_model(rows, n, seed)
+
+            thread = threading.Thread(target=work, daemon=True)
+            self._refit_job = (thread, box, gen)
+            thread.start()
+        else:
+            self._install_dmm(self._fit_model(rows, n, seed))
+
+    def _poll_refit(self):
+        if self._refit_job is None:
+            return
+        thread, box, gen = self._refit_job
+        if thread.is_alive():
+            return
+        thread.join()
+        self._refit_job = None
+        model = box.get("model")
+        # a resize since the fit started makes the result stale (wrong
+        # membership, possibly even the wrong width) — drop it
+        if (gen == self._resize_count and model is not None
+                and model.n_workers == self._n):
+            self._install_dmm(model)
+
+    def _fit_model(self, rows: np.ndarray, n: int,
+                   seed: int) -> RuntimeModel:
+        model = RuntimeModel(n_workers=n, lag=self._lag,
+                             z_dim=self._z_dim, hidden=self._hidden)
+        model.fit(rows, steps=self.refit_steps, batch=self.refit_batch,
+                  seed=seed)
+        return model

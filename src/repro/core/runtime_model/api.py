@@ -168,7 +168,9 @@ class RuntimeModel:
         samples = x_next * norm_scale
         cutoff = order_stats.optimal_cutoff_jax_from_floor(samples, lo)
         pred_mu = jnp.mean(emu, axis=0) * norm_scale
-        pred_std = jnp.sqrt(jnp.mean(estd, axis=0) ** 2
+        # mixture-variance law over the K mixture components:
+        # Var = E[std^2] + Var[mu] (E[std]^2 under-disperses the tail)
+        pred_std = jnp.sqrt(jnp.mean(estd ** 2, axis=0)
                             + jnp.var(emu, axis=0)) * norm_scale
         return cutoff, samples, pred_mu, pred_std
 

@@ -1,33 +1,147 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-"""Elastic-recovery dry-run: prove the framework survives losing hardware.
+"""Elastic recovery: survive losing (and regaining) hardware — for real.
 
-Scenario: a 16x16 pod loses a rack -> the job restarts on a DEGRADED
-(8,16) = 128-chip mesh.  This script shows, abstractly (AOT, no allocation):
+Default mode runs a SEEDED degraded-capacity scenario end-to-end on this
+container (no mesh required):
 
-  1. train_step lowers + compiles on the degraded mesh (sharding rules are
-     mesh-shape-agnostic: FSDP dim-0 / batch divisibility recomputed);
-  2. the checkpoint restores: arrays are saved in logical (unsharded) form,
-     so `restore(..., shardings=<new mesh>)` is the whole resharding story;
-  3. the cutoff controller shrinks from 16 to 8 DP workers — the
-     ElfvingController takes over until the DMM is refit (DESIGN.md §3).
+  1. fit the DMM on an 8-worker paper-cluster trace and train with the
+     ``ElasticController`` driving cutoffs;
+  2. a churn event kills two workers mid-run (``ChurnSim``): the Trainer
+     detects the width change, remaps the controller's lag window
+     (survivors column-exact), and decisions route through the analytic
+     Elfving fallback while the DMM refits at width 6;
+  3. the workers return: a second resize back to 8, same protocol;
+  4. a checkpoint written mid-churn is restored into a fresh Trainer at
+     the degraded width — the controller window comes back warm
+     (allclose), straggler prediction does not restart cold.
 
-  PYTHONPATH=src python -m repro.launch.elastic [--arch qwen2-0.5b]
+``--aot`` runs the original dry-run instead: prove train_step lowers and
+compiles on a degraded (8,16) mesh after losing a rack of a 16x16 pod,
+and that the mesh-agnostic checkpoint reshards onto the survivors.
+
+  PYTHONPATH=src python -m repro.launch.elastic [--steps N]
+  PYTHONPATH=src python -m repro.launch.elastic --aot [--arch qwen2-0.5b]
 """
 import argparse
-import time
+import os
+import sys
 
-import jax
 
-from repro import optim
-from repro.configs.base import SHAPES, get_config
-from repro.dist import sharding as shd
-from repro.launch import inputs as I
-from repro.launch import train as T
-from repro.launch.mesh import make_mesh, make_production_mesh
+# ---------------------------------------------------------------------------
+# Default mode: seeded degraded-capacity run (CPU, no mesh).
+# ---------------------------------------------------------------------------
+
+
+def run_churn_demo(steps: int = 60, seed: int = 0) -> dict:
+    import jax
+    import numpy as np
+
+    from repro import optim
+    from repro.cluster.simulator import (ChurnEvent, ChurnSim,
+                                         paper_cluster_158)
+    from repro.configs.base import bench_tiny_config
+    from repro.core.controller import ElasticController, FullSyncController
+    from repro.core.runtime_model.api import RuntimeModel
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.train import Trainer, clock_to_loss, jit_train_step
+    from repro.models import model as M
+
+    cfg = bench_tiny_config()
+    n = 8
+    shrink_at, recover_at = steps // 3, 2 * steps // 3
+    ckpt_dir = "/tmp/repro_elastic_demo"
+    import shutil
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    print(f"=== fit the DMM on a {n}-worker paper-cluster trace ===")
+    trace = paper_cluster_158(seed, n_workers=n).run(120)
+    rm = RuntimeModel(n_workers=n, lag=10).init(seed)
+    rm.fit(trace, steps=150, batch=8, seed=seed)
+
+    def make_timer():
+        return ChurnSim(paper_cluster_158(seed + 1, n_workers=n),
+                        [ChurnEvent(step=shrink_at, kill=(6, 7)),
+                         ChurnEvent(step=recover_at, restore=(6, 7))])
+
+    opt = optim.adamw(3e-3)
+    step_fn = jit_train_step(cfg, opt)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(seed))
+        return {"params": params, "opt": opt.init(params)}
+
+    mid = (shrink_at + recover_at) // 2   # a ckpt lands mid-churn
+
+    def make_trainer(ctl, timer, ckpt=None):
+        data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                               global_batch=24, seed=seed)
+        tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=ctl,
+                     timer=timer, n_workers=timer.n_workers, ckpt_dir=ckpt,
+                     ckpt_every=mid)
+        return tr.restore_or_init(init_fn)
+
+    print(f"=== churn run: n {n} -> 6 at step {shrink_at}, "
+          f"-> {n} at step {recover_at} ===")
+    ctl = ElasticController(rm, k_samples=32, seed=seed, refit_steps=60)
+    ctl.seed_window(trace[-40:])
+    tr = make_trainer(ctl, make_timer(), ckpt=ckpt_dir)
+    tr.run(recover_at - 1)                # shrink fires; ckpt at width 6
+
+    print("=== restart from the mid-churn checkpoint ===")
+    from repro.checkpoint import store
+    saved_step = store.latest_step(ckpt_dir)
+    saved = store.restore_group(ckpt_dir, "ctl")
+    n_saved = int(saved["n"])
+    ctl2 = ElasticController(rm, k_samples=32, seed=seed, refit_steps=60)
+    timer2 = make_timer()
+    for _ in range(saved_step):          # replay the schedule to the ckpt
+        timer2.step()
+    tr2 = Trainer(cfg=cfg, step_fn=step_fn, controller=ctl2,
+                  data=SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                                       global_batch=24, seed=seed),
+                  timer=timer2, n_workers=n, ckpt_dir=ckpt_dir)
+    tr2.restore_or_init(init_fn)
+    warm = np.allclose(ctl2.window_array(), saved["window"])
+    print(f"  resumed at step {tr2.step}, width {tr2.n_workers} "
+          f"(ckpt width {n_saved}), controller window warm: {warm}")
+    assert warm and tr2.n_workers == n_saved == 6
+    tr2.run(3)
+
+    tr.run(steps - tr.step)               # recovery back to 8 workers
+    widths = [h["n"] for h in tr.history]
+    print(f"  widths seen: {sorted(set(widths))}; "
+          f"fallback steps: {ctl.fallback_steps}")
+    assert 6 in widths and 8 in widths, "churn did not fire"
+
+    print("=== full-sync baseline on the identical churn schedule ===")
+    sync = make_trainer(FullSyncController(n), make_timer())
+    sync.run(steps)
+
+    target = float(np.mean([h["loss"] for h in sync.history[-3:]]))
+    t_el = clock_to_loss(tr.history, target)
+    t_sync = clock_to_loss(sync.history, target)
+    fmt = lambda v: "n/a" if v is None else f"{v:.1f}s"
+    print(f"  wall-clock to sync's final loss: elastic {fmt(t_el)} "
+          f"vs full-sync {fmt(t_sync)}")
+    print("\nelastic degraded-capacity run OK")
+    return {"widths": widths, "t_elastic": t_el, "t_sync": t_sync,
+            "resumed_step": int(tr2.step), "resumed_n": int(tr2.n_workers)}
+
+
+# ---------------------------------------------------------------------------
+# --aot mode: mesh-level dry-run (lowering + reshard story, no allocation).
+# ---------------------------------------------------------------------------
 
 
 def compile_on(cfg, shape, mesh, label):
+    import time
+
+    import jax
+
+    from repro import optim
+    from repro.dist import sharding as shd
+    from repro.launch import inputs as I
+    from repro.launch import train as T
+
     lay = shd.make_layout(mesh, "train_sp")
     key = jax.random.PRNGKey(0)
     t0 = time.time()
@@ -49,11 +163,18 @@ def compile_on(cfg, shape, mesh, label):
     return sshard
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    args = ap.parse_args()
-    cfg = get_config(args.arch)
+def run_aot(arch: str):
+    # every jax import in this module is deferred, so setting the fake
+    # device count here (not at module import) covers programmatic
+    # callers too — as long as jax has not been imported elsewhere first
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    import jax
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.mesh import make_mesh, make_production_mesh
+
+    cfg = get_config(arch)
     shape = SHAPES["train_4k"]
 
     print("=== healthy pod: 16x16 = 256 chips ===")
@@ -65,19 +186,28 @@ def main():
     sshard = compile_on(cfg, shape, degraded, "degraded")
 
     print("=== checkpoint reshard path ===")
-    print("checkpoints store logical (unsharded) arrays; restore() takes the")
-    print("NEW mesh's NamedShardings and device_puts onto the survivors —")
-    print("see repro.checkpoint.store.restore(shardings=...) and")
-    print("tests/test_system.py::test_trainer_checkpoint_restart_resumes.")
+    print("checkpoints store logical (unsharded) arrays; restore() takes "
+          "the NEW mesh's NamedShardings and device_puts onto the "
+          "survivors — see repro.checkpoint.store.restore(shardings=...).")
     n_leaves = len(jax.tree.leaves(sshard["params"]))
     print(f"({n_leaves} param leaves get degraded-mesh shardings)")
+    print("\nelastic AOT dry-run OK")
 
-    print("=== controller ===")
-    print("DP workers 16 -> 8: Trainer(n_workers=8) + ElfvingController")
-    print("until the DMM is refit on the new cluster shape (DESIGN.md §3).")
-    print("\nelastic recovery dry-run OK")
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--aot", action="store_true",
+                    help="mesh-level compile dry-run instead of the "
+                         "end-to-end churn demo")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.aot:
+        run_aot(args.arch)
+    else:
+        run_churn_demo(steps=args.steps, seed=args.seed)
 
 
 if __name__ == "__main__":
-    import sys
     sys.exit(main())

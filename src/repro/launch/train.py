@@ -19,7 +19,9 @@
 The ``Trainer`` is the host-side driver: controller -> bit-array ->
 weights (or the bit array itself under ``mask_agg="psum"``), per-worker
 sampling with replacement, simulated (or measured) step times,
-checkpoint/restart, elastic resize.
+checkpoint/restart (controller window + membership included), and mid-run
+elastic resize (``Trainer.resize`` / a width-changing timer such as
+``cluster.simulator.ChurnSim``).
 """
 from __future__ import annotations
 
@@ -287,6 +289,21 @@ def filter_opt_shardings(opt_shard, opt_state_tree):
             for k in opt_state_tree}
 
 
+def clock_to_loss(history, target: float, window: int = 3):
+    """Simulated wall-clock until the ``window``-step trailing mean loss
+    reaches ``target``; None if the run never gets there.
+
+    THE wall-clock-to-loss metric for Trainer histories — the acceptance
+    tests, benches and demos all share this one implementation (losses
+    must already be drained floats, i.e. after ``run()`` returned).
+    """
+    losses = [h["loss"] for h in history]
+    for i in range(len(losses)):
+        if np.mean(losses[max(0, i - window + 1):i + 1]) <= target:
+            return history[i]["clock"]
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Production Trainer (host-side driver).
 # ---------------------------------------------------------------------------
@@ -315,6 +332,16 @@ class Trainer:
     / verbose / run-end boundaries).  ``metrics_every=1`` restores the
     blocking per-step loop (useful for benchmarking the overlap win);
     ``metrics_every=0`` drains only at boundaries.
+
+    Elastic membership: when the timer exposes ``n_workers`` /
+    ``active_ids`` (``ChurnSim``), the loop detects worker-set changes
+    before each step and calls :meth:`resize` — the controller's lag
+    window is remapped (survivors column-exact), the bit-array/weights
+    plumbing is rebuilt at the new width, and ``B % W`` divisibility is
+    re-checked for both ``mask_agg`` paths.  Checkpoints carry the
+    controller window, step and membership (the ``"ctl"`` group), so a
+    restart mid-churn resumes with a warm straggler predictor at the
+    checkpoint's worker count.
     """
     cfg: Any
     step_fn: Callable
@@ -331,11 +358,14 @@ class Trainer:
     state: Dict = None
     step: int = 0
     sim_clock: float = 0.0
+    members: Optional[np.ndarray] = None      # global worker ids
     history: list = field(default_factory=list)
     _pending_metrics: list = field(default_factory=list, repr=False)
 
     def restore_or_init(self, init_state_fn):
         from repro.checkpoint import store
+        if self.members is None:
+            self.members = np.arange(self.n_workers)
         if self.ckpt_dir and store.latest_step(self.ckpt_dir) is not None:
             example = init_state_fn()
             restored = store.restore(self.ckpt_dir,
@@ -344,9 +374,96 @@ class Trainer:
             self.state = restored["state"]
             self.step = int(restored["meta"]["step"])
             self.sim_clock = float(restored["meta"]["clock"])
+            self._restore_controller(store)
         else:
             self.state = init_state_fn()
         return self
+
+    def _restore_controller(self, store):
+        """Warm-restore the straggler predictor from the ``ctl`` group."""
+        grp = store.restore_group(self.ckpt_dir, "ctl")
+        if grp is None:
+            return
+        n_saved = int(grp["n"])
+        members = np.asarray(grp["members"], int)
+        if (n_saved != self.n_workers
+                or not np.array_equal(members, self.members)):
+            # the checkpoint was taken mid-churn with a different worker
+            # set: remap onto the SAVED membership (survivor columns by
+            # global id, not by position — the set may not be a prefix)
+            old = {wid: col for col, wid in enumerate(self.members)}
+            col_map = np.array([old.get(wid, -1) for wid in members], int)
+            self.resize(n_saved, col_map=col_map, members=members)
+        ctl = self.controller
+        if "window" in grp and hasattr(ctl, "seed_window"):
+            ctl.seed_window(grp["window"])
+        if hasattr(ctl, "_step"):
+            ctl._step = int(grp["step"])
+
+    def _controller_ckpt(self) -> Dict[str, np.ndarray]:
+        members = (self.members if self.members is not None
+                   else np.arange(self.n_workers))
+        grp = {"n": np.int64(self.n_workers),
+               "members": np.asarray(members, np.int64),
+               "step": np.int64(getattr(self.controller, "_step",
+                                        self.step))}
+        if hasattr(self.controller, "window_array"):
+            try:
+                grp["window"] = np.asarray(self.controller.window_array(),
+                                           np.float64)
+            except ValueError:      # window still empty (cold controller)
+                pass
+        return grp
+
+    # -- elastic membership --------------------------------------------
+    def resize(self, n_workers: int, col_map=None, members=None):
+        """Elastic worker-membership change, mid-run.
+
+        Re-checks global-batch divisibility for the new width (both
+        ``mask_agg`` paths slice the global batch into per-worker
+        contiguous shards), remaps the controller's lag window
+        (``col_map`` as in ``core.controller.remap_columns``), and
+        records the new membership for the checkpoint meta.  The train
+        step itself is width-agnostic — the next step's bit array simply
+        has the new length (a new jit trace under ``mask_agg="psum"``).
+        """
+        n_new = int(n_workers)
+        B = getattr(self.data, "global_batch", None)
+        if B is not None and B % n_new != 0:
+            raise ValueError(
+                f"cannot resize to {n_new} workers: global batch {B} is "
+                f"not divisible by the worker count (mask_agg="
+                f"{self.mask_agg!r} slices the batch into B//W per-worker "
+                f"shards — pick a worker count that divides {B})")
+        if hasattr(self.controller, "resize"):
+            self.controller.resize(n_new, col_map=col_map)
+        elif getattr(self.controller, "n", n_new) != n_new:
+            raise ValueError(
+                f"controller {type(self.controller).__name__} cannot "
+                f"resize to {n_new} workers")
+        self.n_workers = n_new
+        self.members = (np.asarray(members, int) if members is not None
+                        else np.arange(n_new))
+        return self
+
+    def _sync_membership(self):
+        """Follow the timer's worker set (ChurnSim) before each step."""
+        if self.members is None:
+            self.members = np.arange(self.n_workers)
+        if self.timer is None:
+            return
+        ids = getattr(self.timer, "active_ids", None)
+        w = int(getattr(self.timer, "n_workers", self.n_workers))
+        if ids is None:
+            if w != self.n_workers:
+                self.resize(w)          # prefix survivors
+            return
+        ids = np.asarray(ids, int)
+        if w == self.n_workers and np.array_equal(ids, self.members):
+            return
+        old = {wid: col for col, wid in enumerate(self.members)}
+        col_map = np.array([old.get(wid, -1) for wid in ids], int)
+        self.resize(w, col_map=col_map, members=ids)
 
     def _drain_metrics(self):
         """Fetch every pending device-side loss into its history record."""
@@ -359,9 +476,11 @@ class Trainer:
         from repro.checkpoint import store
         ckpt = (store.AsyncCheckpointer(self.ckpt_dir, self.keep)
                 if self.ckpt_dir else None)
-        n = self.n_workers
         for _ in range(n_steps):
+            self._sync_membership()     # elastic: follow the timer's width
+            n = self.n_workers
             c = int(self.controller.predict_cutoff())
+            c = min(c, n)
             times = (self.timer.step() if self.timer is not None
                      else np.ones(n))
             # fastest c workers participate (the PS's bit array)
@@ -369,6 +488,10 @@ class Trainer:
             mask = np.zeros(n, np.float32)
             mask[order[:c]] = 1.0
             iter_time = float(times[order[c - 1]])
+            # the controller must see the SAME worker set the aggregation
+            # used: under ties, a times<=iter_time threshold marks MORE
+            # than c workers finished and the two views diverge
+            finished = mask.astype(bool)
 
             batch = dict(self.data.batch(self.step))
             if self.mask_agg == "psum":
@@ -379,11 +502,11 @@ class Trainer:
             # dispatch the train step FIRST (async), then run the PS's
             # observe/imputation so controller inference overlaps compute
             self.state, metrics = self.step_fn(self.state, batch)
-            self.controller.observe(times, times <= iter_time + 1e-12)
+            self.controller.observe(times, finished)
             self.step += 1
             self.sim_clock += iter_time
             rec = {"step": self.step, "clock": self.sim_clock, "c": c,
-                   "iter_time": iter_time,
+                   "n": n, "iter_time": iter_time,
                    "loss": metrics["loss"]}   # device scalar, drained later
             self.history.append(rec)
             self._pending_metrics.append(rec)
@@ -399,7 +522,8 @@ class Trainer:
             if ckpt and self.step % self.ckpt_every == 0:
                 ckpt.save(self.step, {
                     "state": self.state,
-                    "meta": {"step": self.step, "clock": self.sim_clock}})
+                    "meta": {"step": self.step, "clock": self.sim_clock},
+                    "ctl": self._controller_ckpt()})
         self._drain_metrics()
         if ckpt:
             ckpt.wait()

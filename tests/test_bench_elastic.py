@@ -1,0 +1,53 @@
+"""BENCH_elastic.json schema guard.
+
+Runs ``benchmarks.elastic_bench.bench_elastic`` at minimum size and
+asserts the machine-readable output keeps the ``bench_elastic/v1``
+contract.  Schema smoke test only — timings on a loaded CI box are noise.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    from benchmarks.elastic_bench import bench_elastic
+
+    out = tmp_path_factory.mktemp("bench") / "BENCH_elastic.json"
+    bench_elastic(quick=True, out_path=str(out), n_list=(8,),
+                  churn_steps=9, refit_steps=5)
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_bench_elastic_schema(bench_json):
+    assert bench_json["schema"] == "bench_elastic/v1"
+    rows = bench_json["resize"]
+    assert {r["backend"] for r in rows} == {"device", "numpy"}
+    for row in rows:
+        for key in ("n_workers", "n_small", "shrink_us", "grow_us"):
+            assert key in row, key
+        assert row["shrink_us"] > 0 and row["grow_us"] > 0
+        assert row["n_small"] < row["n_workers"]
+    ch = bench_json["churn"]
+    for key in ("arch", "n_workers", "steps", "shrink_at", "recover_at",
+                "elastic_steps_per_s", "sync_steps_per_s", "refit_s",
+                "n_refits", "clock_to_loss_elastic", "clock_to_loss_sync"):
+        assert key in ch, key
+    assert ch["elastic_steps_per_s"] > 0 and ch["sync_steps_per_s"] > 0
+
+
+def test_committed_bench_elastic_matches_schema():
+    """The checked-in BENCH_elastic.json (the perf trajectory's churn
+    datapoint) must exist and carry the same schema."""
+    path = Path(__file__).resolve().parent.parent / "BENCH_elastic.json"
+    assert path.exists(), "BENCH_elastic.json not committed"
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema"] == "bench_elastic/v1"
+    assert {r["n_workers"] for r in data["resize"]} == {32, 158}
+    assert data["churn"]["n_refits"] >= 1

@@ -1,0 +1,425 @@
+"""Elastic worker membership: churn simulation, the resize protocol, and
+warm checkpoint restarts across membership changes.
+
+The acceptance scenario: a seeded 8 -> 6 -> 8 churn run on the
+paper_cluster_158 phenomenology, driven end-to-end by the
+ElasticController (DMM while the shape matches, Elfving fallback + refit
+across each resize), must beat full sync on wall-clock-to-loss — and a
+checkpoint written mid-churn must restore a WARM (allclose) controller
+window at the degraded worker count.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import store
+from repro.cluster.simulator import (ChurnEvent, ChurnSim, ClusterSim,
+                                     paper_cluster_158, resize_schedule)
+from repro.cluster.trace import TraceReplay, load_trace, save_trace
+from repro.core.controller import (CutoffController, ElasticController,
+                                   ElfvingController, FullSyncController,
+                                   StaticCutoffController, remap_columns)
+from repro.core.runtime_model.api import RuntimeModel
+from repro.configs.base import bench_tiny_config
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.train import Trainer, clock_to_loss, jit_train_step
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# ChurnSim / TraceReplay / trace-file contracts.
+# ---------------------------------------------------------------------------
+
+
+def test_churnsim_membership_schedule():
+    churn = ChurnSim(ClusterSim(n_workers=8, n_nodes=2, seed=0),
+                     [ChurnEvent(step=3, kill=(2, 5)),
+                      ChurnEvent(step=6, restore=(2,))])
+    widths, ids = [], []
+    for _ in range(8):
+        ids.append(churn.active_ids.tolist())
+        widths.append(len(churn.step()))
+    assert widths == [8, 8, 8, 6, 6, 6, 7, 7]
+    assert ids[3] == [0, 1, 3, 4, 6, 7]
+    assert ids[6] == [0, 1, 2, 3, 4, 6, 7]
+
+
+def test_churnsim_survivors_column_exact():
+    """The base phenomenology is independent of membership: a survivor's
+    runtime series matches the full-width run column for column."""
+    full = ClusterSim(n_workers=8, n_nodes=2, seed=4).run(10)
+    churn = ChurnSim(ClusterSim(n_workers=8, n_nodes=2, seed=4),
+                     [ChurnEvent(step=4, kill=(1, 6))])
+    rows = churn.run(10)
+    keep = [0, 2, 3, 4, 5, 7]
+    for t in range(4):
+        np.testing.assert_array_equal(rows[t], full[t])
+    for t in range(4, 10):
+        np.testing.assert_array_equal(rows[t], full[t][keep])
+
+
+def test_resize_schedule_width_plan():
+    churn = resize_schedule(ClusterSim(n_workers=8, n_nodes=2, seed=1),
+                            [(2, 5), (4, 8)])
+    widths = [len(churn.step()) for _ in range(6)]
+    assert widths == [8, 8, 5, 5, 8, 8]
+
+
+def test_trace_replay_segments_and_exhaustion():
+    segs = [np.full((2, 4), 1.0), np.full((3, 6), 2.0)]
+    rep = TraceReplay(segs, loop=False)
+    assert rep.n_workers == 4
+    assert rep.step().shape == (4,)
+    rep.step()
+    assert rep.n_workers == 6          # next row comes from segment 2
+    for _ in range(3):
+        assert rep.step().shape == (6,)
+    with pytest.raises(IndexError):     # NOT a bare StopIteration
+        rep.step()
+
+    looped = TraceReplay(segs, loop=True)
+    widths = [looped.step().shape[0] for _ in range(10)]
+    assert widths == [4, 4, 6, 6, 6] * 2
+
+
+def test_trace_meta_roundtrip(tmp_path):
+    path = str(tmp_path / "t.npz")
+    times = np.random.default_rng(0).uniform(0.5, 2.0, size=(6, 4))
+    save_trace(path, times, meta={"cluster": "paper_158", "n_nodes": 4})
+    plain = load_trace(path)
+    np.testing.assert_allclose(plain, times, atol=1e-6)
+    t2, meta = load_trace(path, with_meta=True)
+    np.testing.assert_allclose(t2, times, atol=1e-6)
+    assert meta == {"cluster": "paper_158", "n_nodes": 4}
+
+
+# ---------------------------------------------------------------------------
+# Window remapping + controller resize units.
+# ---------------------------------------------------------------------------
+
+
+def test_remap_columns_survivors_exact_and_mean_fill():
+    rows = np.arange(20, dtype=np.float64).reshape(4, 5)
+    col_map = np.array([3, 0, -1, 4])
+    out = remap_columns(rows, 4, col_map)
+    np.testing.assert_array_equal(out[:, 0], rows[:, 3])
+    np.testing.assert_array_equal(out[:, 1], rows[:, 0])
+    np.testing.assert_array_equal(out[:, 3], rows[:, 4])
+    np.testing.assert_allclose(out[:, 2], rows[:, [3, 0, 4]].mean(axis=1))
+    # default map: identity prefix, extras are cluster-mean seeded
+    grown = remap_columns(rows, 7)
+    np.testing.assert_array_equal(grown[:, :5], rows)
+    np.testing.assert_allclose(grown[:, 5], rows.mean(axis=1))
+
+
+@pytest.fixture(scope="module")
+def fitted8():
+    trace = paper_cluster_158(0, n_workers=8).run(200)
+    rm = RuntimeModel(n_workers=8, lag=10).init(0)
+    rm.fit(trace, steps=200, batch=8, seed=0)
+    return rm, trace
+
+
+def _unfitted_model(n, template):
+    rm = RuntimeModel(n_workers=n, lag=template.lag,
+                      z_dim=template.z_dim, hidden=template.hidden).init(1)
+    rm.norm_scale = template.norm_scale
+    return rm
+
+
+@pytest.mark.parametrize("backend", ["device", "numpy"])
+def test_cutoff_controller_resize_ring_remap(fitted8, backend):
+    rm, trace = fitted8
+    ctl = CutoffController(rm, k_samples=16, seed=0, backend=backend)
+    ctl.seed_window(trace)
+    before = ctl.window_array()
+    col_map = np.array([0, 1, 2, 3, 4, 6])      # worker 5 and 7 depart
+    ctl.resize(6, col_map=col_map, model=_unfitted_model(6, rm))
+    after = ctl.window_array()
+    assert after.shape == (before.shape[0], 6)
+    # survivors are column-exact (device path: f32 ring, exact copy)
+    np.testing.assert_array_equal(after, before[:, col_map])
+    # the controller still decides at the new width
+    c = ctl.predict_cutoff()
+    assert 1 <= c <= 6
+
+    # grow back to 8: new columns seeded from the survivors' cluster mean
+    grow_map = np.array([0, 1, 2, 3, 4, 5, -1, -1])
+    ctl.resize(8, col_map=grow_map, model=_unfitted_model(8, rm))
+    grown = ctl.window_array()
+    np.testing.assert_array_equal(grown[:, :6], after)
+    np.testing.assert_allclose(grown[:, 6], after.mean(axis=1), rtol=1e-6)
+    np.testing.assert_allclose(grown[:, 7], grown[:, 6])
+
+
+def test_static_cutoff_resize_keeps_explicit_cutoff_through_churn():
+    ctl = StaticCutoffController(8, cutoff=7)
+    ctl.resize(4)
+    assert ctl.c == 4                   # clamped to the live width
+    ctl.resize(8)
+    assert ctl.c == 7                   # configured cutoff restored
+    frac = StaticCutoffController(100)  # drop_frac mode rescales
+    ctl_c = frac.c
+    frac.resize(50)
+    assert frac.c == max(1, int(round(50 * (1 - frac.drop_frac))))
+    frac.resize(100)
+    assert frac.c == ctl_c
+
+
+@pytest.mark.parametrize("backend", ["device", "numpy"])
+def test_window_array_empty_raises(fitted8, backend):
+    """A cold controller must refuse to materialize a window — the
+    checkpoint path skips persisting it rather than saving zeros."""
+    rm, _ = fitted8
+    ctl = CutoffController(rm, k_samples=8, seed=0, backend=backend)
+    with pytest.raises(ValueError):
+        ctl.window_array()
+
+
+def test_numpy_window_stays_bounded(fitted8):
+    rm, trace = fitted8
+    ctl = CutoffController(rm, k_samples=8, seed=0, backend="numpy")
+    ctl.seed_window(trace)
+    for _ in range(30):
+        ctl.predict_cutoff()
+        ctl.observe(np.full(8, 1.0))
+    assert len(ctl._window) <= ctl._cap + 1
+
+
+def test_cutoff_controller_resize_requires_matching_model(fitted8):
+    rm, trace = fitted8
+    ctl = CutoffController(rm, k_samples=16, seed=0)
+    ctl.seed_window(trace)
+    with pytest.raises(ValueError, match="RuntimeModel of that width"):
+        ctl.resize(6)
+
+
+def test_elastic_resize_rejects_wrong_width_model(fitted8):
+    rm, trace = fitted8
+    ctl = ElasticController(rm, k_samples=16, seed=0)
+    ctl.seed_window(trace[-40:])
+    with pytest.raises(ValueError, match="width"):
+        ctl.resize(6, model=rm)            # rm is still width 8
+
+
+def test_elastic_async_refit_dropped_by_generation(fitted8):
+    """A resize abandons an in-flight async refit without joining it;
+    its late result is discarded by generation, never installed."""
+    rm, trace = fitted8
+    ctl = ElasticController(rm, k_samples=16, seed=0, refit_async=True)
+    ctl.seed_window(trace[-40:])
+    ctl.resize(6)
+    assert ctl.mode == "fallback" and ctl._refit_job is None
+    model6 = RuntimeModel(n_workers=6, lag=rm.lag, z_dim=rm.z_dim,
+                          hidden=rm.hidden).init(0)
+    model6.norm_scale = rm.norm_scale
+    done = threading.Thread(target=lambda: None)
+    done.start()
+    done.join()
+    # a finished fit from a PREVIOUS resize generation: stale, dropped
+    ctl._refit_job = (done, {"model": model6}, ctl._resize_count - 1)
+    ctl._poll_refit()
+    assert ctl.mode == "fallback"
+    # the same result at the CURRENT generation installs
+    ctl._refit_job = (done, {"model": model6}, ctl._resize_count)
+    ctl._poll_refit()
+    assert ctl.mode == "dmm" and ctl._dmm.n == 6
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes: Elfving censoring, mixture variance.
+# ---------------------------------------------------------------------------
+
+
+def test_elfving_observe_imputes_censored_at_cutoff_time():
+    ctl = ElfvingController(4, warmup=1)
+    ctl.observe(np.array([1.0, 2.0, 777.0, 3.0]),
+                np.array([True, True, False, True]))
+    row = ctl.buf[-1]
+    assert row.shape == (4,)                  # censored entry KEPT, imputed
+    np.testing.assert_allclose(row, [1.0, 2.0, 3.0, 3.0])
+    # full-sync observation unchanged
+    ctl.observe(np.array([1.0, 2.0, 2.5, 3.0]))
+    np.testing.assert_allclose(ctl.buf[-1], [1.0, 2.0, 2.5, 3.0])
+
+
+def test_predictive_std_follows_mixture_variance_law(fitted8):
+    rm, trace = fitted8
+    ctl = CutoffController(rm, k_samples=32, seed=0, backend="numpy")
+    ctl.seed_window(trace)
+    window = ctl.window_array()
+    ctl.predict_cutoff()
+    _, mu, std = rm.predict_next(window, 32, seed=ctl.seed + ctl._step)
+    want = np.sqrt(np.mean(std ** 2, axis=0) + mu.var(axis=0))
+    np.testing.assert_allclose(ctl._pending_pred[1], want, rtol=1e-6)
+    # guard: distinct from the old (wrong) E[std]^2 formula
+    wrong = np.sqrt(np.mean(std, axis=0) ** 2 + mu.var(axis=0))
+    assert not np.allclose(want, wrong)
+    assert np.all(want >= wrong - 1e-12)      # Jensen: the fix widens sigma
+
+
+# ---------------------------------------------------------------------------
+# Trainer-level elastic plumbing.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_train():
+    cfg = bench_tiny_config()
+    opt = optim.adamw(3e-3)
+    step = jit_train_step(cfg, opt)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    return cfg, step, init_fn
+
+
+def _trainer(cfg, step, init_fn, ctl, timer, n, *, batch=24, ckpt=None,
+             ckpt_every=50, mask_agg="weights"):
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                           global_batch=batch, seed=0)
+    tr = Trainer(cfg=cfg, step_fn=step, data=data, controller=ctl,
+                 timer=timer, n_workers=n, mask_agg=mask_agg,
+                 ckpt_dir=ckpt, ckpt_every=ckpt_every)
+    return tr.restore_or_init(init_fn)
+
+
+def test_trainer_resize_rejects_non_divisible_batch(tiny_train):
+    cfg, step, init_fn = tiny_train
+    tr = _trainer(cfg, step, init_fn, FullSyncController(8), None, 8,
+                  mask_agg="psum")
+    with pytest.raises(ValueError, match="not divisible"):
+        tr.resize(5)                           # 24 % 5 != 0
+    tr.resize(6)                               # 24 % 6 == 0: fine
+    assert tr.n_workers == 6 and tr.controller.n == 6
+
+
+def test_trainer_mask_and_observe_agree_under_ties(tiny_train):
+    """Under tied runtimes the old times<=iter_time mask marked MORE
+    workers finished than the c-hot bit array the gradients used; the
+    controller must see exactly the order[:c] selection."""
+    cfg, step, init_fn = tiny_train
+
+    observed = []
+
+    class Rec(StaticCutoffController):
+        def observe(self, times, finished_mask=None):
+            observed.append(np.asarray(finished_mask, bool))
+
+    timer = TraceReplay(np.ones((4, 8)))       # every runtime tied
+    tr = _trainer(cfg, step, init_fn, Rec(8, cutoff=3), timer, 8)
+    tr.run(4)
+    for m in observed:
+        assert m.sum() == 3                    # == c, never more
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: seeded 8 -> 6 -> 8 churn, elastic controller.
+# ---------------------------------------------------------------------------
+
+SHRINK_AT, RECOVER_AT, CHURN_STEPS = 15, 30, 45
+
+
+def _churn_timer(seed):
+    return ChurnSim(paper_cluster_158(seed, n_workers=8),
+                    [ChurnEvent(step=SHRINK_AT, kill=(6, 7)),
+                     ChurnEvent(step=RECOVER_AT, restore=(6, 7))])
+
+
+def _elastic(rm, trace, **kw):
+    ctl = ElasticController(rm, k_samples=32, seed=0, refit_steps=60,
+                            refit_fresh=3, fallback_warmup=2, **kw)
+    ctl.seed_window(trace[-60:])
+    return ctl
+
+
+def test_elastic_churn_beats_full_sync(tiny_train, fitted8):
+    cfg, step, init_fn = tiny_train
+    rm, trace = fitted8
+    ctl = _elastic(rm, trace)
+    tr_el = _trainer(cfg, step, init_fn, ctl, _churn_timer(9), 8)
+    tr_el.run(CHURN_STEPS)
+    widths = [h["n"] for h in tr_el.history]
+    assert 6 in widths and widths[0] == 8 and widths[-1] == 8
+    # across the run the DMM came back from the fallback at least once
+    assert ctl.mode == "dmm"
+    # cutoffs kept tracking the live width
+    for h in tr_el.history:
+        assert 1 <= h["c"] <= h["n"]
+
+    tr_sync = _trainer(cfg, step, init_fn, FullSyncController(8),
+                       _churn_timer(9), 8)
+    tr_sync.run(CHURN_STEPS)
+    target = float(np.mean([h["loss"] for h in tr_sync.history[-3:]]))
+    t_el = clock_to_loss(tr_el.history, target)
+    t_sync = clock_to_loss(tr_sync.history, target)
+    assert t_el is not None
+    assert t_sync is None or t_el < t_sync, (t_el, t_sync)
+
+
+def test_restore_remaps_by_saved_membership_not_prefix(tiny_train, fitted8,
+                                                       tmp_path):
+    """A mid-churn checkpoint whose survivors are NOT a prefix (workers
+    2,3 die) must restore by GLOBAL worker id: new column 2 is old
+    worker 4's series, not old worker 2's."""
+    cfg, step, init_fn = tiny_train
+    rm, trace = fitted8
+    d = str(tmp_path / "ck")
+    ctl = _elastic(rm, trace)
+    timer = ChurnSim(paper_cluster_158(13, n_workers=8),
+                     [ChurnEvent(step=5, kill=(2, 3))])
+    tr = _trainer(cfg, step, init_fn, ctl, timer, 8, ckpt=d, ckpt_every=8)
+    tr.run(10)                    # ckpt at step 8: width 6, non-prefix set
+    saved = store.restore_group(d, "ctl")
+    assert saved["members"].tolist() == [0, 1, 4, 5, 6, 7]
+
+    # restart controller carries a marker trace: column j holds value j
+    ctl2 = ElasticController(rm, k_samples=32, seed=0, refit_steps=60,
+                             refit_fresh=3, fallback_warmup=2)
+    ctl2.seed_window(np.tile(np.arange(8.0), (rm.lag + 15, 1)))
+    timer2 = ChurnSim(paper_cluster_158(13, n_workers=8),
+                      [ChurnEvent(step=0, kill=(2, 3))])
+    tr2 = _trainer(cfg, step, init_fn, ctl2, timer2, 8, ckpt=d,
+                   ckpt_every=8)
+    assert tr2.n_workers == 6
+    assert tr2.members.tolist() == [0, 1, 4, 5, 6, 7]
+    # marker rows (before the warm-restored tail) carry the survivors'
+    # global columns — the prefix remap would leave [0, 1, 2, 3, 4, 5]
+    np.testing.assert_allclose(ctl2._trace[0], [0, 1, 4, 5, 6, 7])
+    np.testing.assert_allclose(ctl2.window_array(), saved["window"],
+                               rtol=1e-7, atol=1e-9)
+
+
+def test_mid_churn_checkpoint_restart_resumes_warm(tiny_train, fitted8,
+                                                   tmp_path):
+    cfg, step, init_fn = tiny_train
+    rm, trace = fitted8
+    d = str(tmp_path / "ck")
+    ctl = _elastic(rm, trace)
+    tr = _trainer(cfg, step, init_fn, ctl, _churn_timer(11), 8,
+                  ckpt=d, ckpt_every=20)
+    tr.run(25)                                  # ckpt at step 20: width 6
+    saved = store.restore_group(d, "ctl")
+    assert saved is not None and int(saved["n"]) == 6
+    assert saved["members"].tolist() == [0, 1, 2, 3, 4, 5]
+    assert saved["window"].shape[1] == 6
+
+    # crash + restart: a fresh trainer at the original width adopts the
+    # checkpoint's degraded membership and a WARM controller window
+    ctl2 = _elastic(rm, trace)
+    timer2 = _churn_timer(11)
+    for _ in range(20):
+        timer2.step()
+    tr2 = _trainer(cfg, step, init_fn, ctl2, timer2, 8, ckpt=d,
+                   ckpt_every=20)
+    assert tr2.step == 20 and tr2.n_workers == 6
+    assert ctl2.n == 6
+    np.testing.assert_allclose(ctl2.window_array(), saved["window"],
+                               rtol=1e-7, atol=1e-9)
+    tr2.run(3)                                  # and it keeps stepping
+    assert tr2.step == 23 and tr2.history[-1]["n"] == 6
