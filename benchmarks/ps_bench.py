@@ -1,0 +1,261 @@
+"""Multi-tenant PS benchmark: batched vs looped decisions + schedulers.
+
+Three sections, emitted as CSV rows AND into a machine-readable
+``BENCH_ps.json`` (schema ``bench_ps/v1``) — the perf trajectory's fourth
+datapoint after agg/controller/elastic:
+
+  * ``decision`` — per-tick decision latency for J concurrent jobs:
+    J looped single-job ``CutoffController(backend="device")`` fused
+    dispatches vs ONE ``PSServer`` vmapped batched dispatch, over
+    J x n_workers.  This is the number the subsystem exists for: at
+    J=16, n=158 the batched path must win (dispatch overhead paid once).
+  * ``aggregate`` — end-to-end multi-job Trainer throughput: J tiny
+    training jobs through one PSServer vs J independent Trainers each
+    with its own device controller (the "J independent servers"
+    baseline).
+  * ``sched`` — under capacity pressure (C < J serviced per tick), the
+    throughput/service spread of the round-robin, priority and
+    shortest-predicted-step-first policies.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+DECISION_NS = (8, 158)
+DECISION_JS = (1, 4, 16)
+
+
+def _model_for(n: int, trace, lag: int = 20):
+    from repro.core.runtime_model.api import RuntimeModel
+
+    # untrained weights time identically to trained ones; skip the fit
+    rm = RuntimeModel(n_workers=n, lag=lag).init(0)
+    rm.norm_scale = float(2.0 * trace[: lag + 1].mean())
+    return rm
+
+
+def _looped_tick(ctls, sims):
+    from repro.core.cutoff import order_stats
+
+    for ctl, sim in zip(ctls, sims):
+        times = sim.step()
+        c = ctl.predict_cutoff()
+        it = order_stats.iter_time(times, c)
+        ctl.observe(times, times <= it + 1e-12)
+
+
+def _batched_tick(server, handles, sims):
+    from repro.core.cutoff import order_stats
+
+    for h, sim in zip(handles, sims):
+        times = sim.step()
+        c = h.predict_cutoff()
+        it = order_stats.iter_time(times, c)
+        h.observe(times, times <= it + 1e-12)
+    server.flush()
+
+
+def _decision_bench(n_list, j_list, iters: int, k_samples: int = 64,
+                    blocks: int = 3):
+    """Batched vs looped per-tick latency, interleaved best-of blocks."""
+    from repro.cluster.simulator import paper_cluster_158
+    from repro.core.controller import CutoffController
+    from repro.ps import PSServer
+
+    rows = []
+    for n in n_list:
+        trace = paper_cluster_158(seed=0, n_workers=n).run(25)
+        rm = _model_for(n, trace)
+        for J in j_list:
+            ctls = [CutoffController(rm, k_samples=k_samples, seed=j,
+                                     backend="device") for j in range(J)]
+            server = PSServer()
+            handles = []
+            for j, ctl in enumerate(ctls):
+                tr = paper_cluster_158(seed=10 + j, n_workers=n).run(25)
+                ctl.seed_window(tr)
+                handles.append(server.admit(
+                    f"job{j}", rm, window=tr, k_samples=k_samples, seed=j))
+
+            def sims(s):
+                return [paper_cluster_158(seed=s + j, n_workers=n)
+                        for j in range(J)]
+
+            # warmup: compile every fused variant on both paths
+            for _ in range(3):
+                _looped_tick(ctls, sims(900))
+                _batched_tick(server, handles, sims(900))
+            best = {"looped": float("inf"), "batched": float("inf")}
+            for _ in range(blocks):
+                s_l, s_b = sims(500), sims(500)
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    _looped_tick(ctls, s_l)
+                best["looped"] = min(best["looped"],
+                                     (time.perf_counter() - t0) / iters * 1e6)
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    _batched_tick(server, handles, s_b)
+                best["batched"] = min(
+                    best["batched"],
+                    (time.perf_counter() - t0) / iters * 1e6)
+            entry = {"n_workers": n, "n_jobs": J, "k_samples": k_samples,
+                     "looped_us": best["looped"],
+                     "batched_us": best["batched"],
+                     "speedup": best["looped"] / best["batched"]}
+            emit(f"ps/decision_looped_n{n}_j{J}", best["looped"],
+                 f"n={n};J={J};K={k_samples}")
+            emit(f"ps/decision_batched_n{n}_j{J}", best["batched"],
+                 f"n={n};J={J};K={k_samples}")
+            emit(f"ps/decision_speedup_n{n}_j{J}", 0.0,
+                 f"{entry['speedup']:.2f}x")
+            rows.append(entry)
+    return rows
+
+
+def _aggregate_bench(n_jobs: int, ticks: int, blocks: int = 2):
+    """J training jobs through one PSServer vs J independent servers."""
+    import jax
+
+    from repro import optim
+    from repro.cluster.simulator import paper_cluster_158
+    from repro.configs.base import bench_tiny_config
+    from repro.core.controller import CutoffController
+    from repro.core.runtime_model.api import RuntimeModel
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.multi_job import build_multi_job, run_ticks
+    from repro.launch.train import Trainer, jit_train_step
+    from repro.models import model as M
+    from repro.ps import make_scheduler
+
+    n_per_job = 8
+    cfg = bench_tiny_config()
+    opt = optim.adamw(3e-3)
+    step_fn = jit_train_step(cfg, opt)
+
+    # -- independent baseline: one CutoffController per job -------------
+    def build_independent():
+        trainers = []
+        for j in range(n_jobs):
+            trace = paper_cluster_158(seed=10 + j,
+                                      n_workers=n_per_job).run(40)
+            rm = RuntimeModel(n_workers=n_per_job, lag=10).init(j)
+            rm.norm_scale = float(2.0 * trace[:11].mean())
+            ctl = CutoffController(rm, k_samples=32, seed=100 * j,
+                                   backend="device")
+            ctl.seed_window(trace[-11:])
+            data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                                   global_batch=24, seed=j)
+            tr = Trainer(cfg=cfg, step_fn=step_fn, data=data,
+                         controller=ctl,
+                         timer=paper_cluster_158(seed=200 + j,
+                                                 n_workers=n_per_job),
+                         n_workers=n_per_job, metrics_every=50)
+
+            def init_fn(jj=j):
+                params = M.init_model(cfg, jax.random.PRNGKey(jj))
+                return {"params": params, "opt": opt.init(params)}
+
+            tr.restore_or_init(init_fn)
+            trainers.append(tr)
+        return trainers
+
+    # warm both paths, then interleaved best-of blocks
+    server, jobs, _ = build_multi_job(n_jobs, n_per_job, seed=0,
+                                      fit_steps=0, metrics_every=50)
+    sched = make_scheduler("rr")
+    run_ticks(server, jobs, sched, 2)
+    indep = build_independent()
+    for tr in indep:
+        tr.run(2)
+    best = {"multi": float("inf"), "independent": float("inf")}
+    for _ in range(blocks):
+        t0 = time.perf_counter()
+        run_ticks(server, jobs, sched, ticks)
+        best["multi"] = min(best["multi"], (time.perf_counter() - t0))
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            for tr in indep:
+                tr.run(1)
+        best["independent"] = min(best["independent"],
+                                  (time.perf_counter() - t0))
+    steps = ticks * n_jobs
+    out = {"arch": f"{cfg.name}/bench_tiny", "n_jobs": n_jobs,
+           "n_per_job": n_per_job, "ticks": ticks,
+           "multi_steps_per_s": steps / best["multi"],
+           "independent_steps_per_s": steps / best["independent"]}
+    out["multi_over_independent"] = (out["multi_steps_per_s"]
+                                     / out["independent_steps_per_s"])
+    emit("ps/aggregate_multi_steps_per_s", best["multi"] / steps * 1e6,
+         f"{out['multi_steps_per_s']:.2f} steps/s")
+    emit("ps/aggregate_independent_steps_per_s",
+         best["independent"] / steps * 1e6,
+         f"{out['independent_steps_per_s']:.2f} steps/s")
+    emit("ps/aggregate_speedup", 0.0,
+         f"{out['multi_over_independent']:.2f}x")
+    return out
+
+
+def _sched_bench(n_jobs: int, ticks: int, capacity: int):
+    """Scheduler-policy spread under capacity pressure."""
+    from repro.launch.multi_job import build_multi_job, run_ticks
+    from repro.ps import make_scheduler
+
+    rows = []
+    for policy in ("rr", "priority", "spsf"):
+        server, jobs, _ = build_multi_job(
+            n_jobs, 8, seed=0, fit_steps=60,
+            priorities=list(range(n_jobs)), metrics_every=50)
+        sched = make_scheduler(policy)
+        # compile both the full-capacity and the capacity-C dispatch
+        # shapes before timing (the jit cache is process-global, so the
+        # first policy would otherwise eat every trace)
+        run_ticks(server, jobs, sched, 2)
+        run_ticks(server, jobs, sched, 3, capacity=capacity)
+        t0 = time.perf_counter()
+        out = run_ticks(server, jobs, sched, ticks, capacity=capacity)
+        wall = time.perf_counter() - t0
+        counts = list(out["serviced"].values())
+        total = sum(counts)
+        row = {"policy": policy, "n_jobs": n_jobs, "capacity": capacity,
+               "ticks": ticks, "total_steps": total,
+               "steps_per_s": total / wall,
+               "service_spread": max(counts) - min(counts),
+               "serviced": out["serviced"],
+               "sim_clock": {j.job_id: j.trainer.sim_clock
+                             for j in jobs.values()}}
+        emit(f"ps/sched_{policy}_steps_per_s", wall / max(total, 1) * 1e6,
+             f"{row['steps_per_s']:.2f} steps/s;"
+             f"spread={row['service_spread']}")
+        rows.append(row)
+    return rows
+
+
+def bench_ps(quick: bool = False, out_path: str = "BENCH_ps.json",
+             n_list=DECISION_NS, j_list=DECISION_JS,
+             decision_iters: int = None, agg_jobs: int = None,
+             agg_ticks: int = None, sched_ticks: int = None):
+    iters = decision_iters if decision_iters is not None else (
+        4 if quick else 10)
+    a_jobs = agg_jobs if agg_jobs is not None else (3 if quick else 4)
+    a_ticks = agg_ticks if agg_ticks is not None else (8 if quick else 20)
+    s_ticks = sched_ticks if sched_ticks is not None else (
+        8 if quick else 24)
+    results = {
+        "schema": "bench_ps/v1",
+        "quick": quick,
+        "decision": _decision_bench(n_list, j_list, iters),
+        "aggregate": _aggregate_bench(a_jobs, a_ticks),
+        "sched": _sched_bench(a_jobs, s_ticks, capacity=max(1, a_jobs - 1)),
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("ps/json_written", 0.0, out_path)
+    return results

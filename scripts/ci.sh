@@ -6,7 +6,8 @@
 #   scripts/ci.sh -m "not sharded"   # skip the multi-device subprocess tests
 #   scripts/ci.sh --bench    # perf runs -> BENCH_agg.json +
 #                            #              BENCH_controller.json +
-#                            #              BENCH_elastic.json
+#                            #              BENCH_elastic.json +
+#                            #              BENCH_ps.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,6 +19,7 @@ if [[ "${1:-}" == "--bench" ]]; then
     python -m benchmarks.run --quick --only agg "$@"
     python -m benchmarks.run --quick --only controller "$@"
     python -m benchmarks.run --quick --only elastic "$@"
+    python -m benchmarks.run --quick --only ps "$@"
     exit 0
 fi
 

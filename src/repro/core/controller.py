@@ -28,8 +28,12 @@ Controllers:
     refits the DMM on the surviving window (src/repro/core/README.md
     has the full elastic contract).
 
-Every controller implements ``resize(n_workers, col_map=None, model=None)``
-for elastic worker membership; observation width is strict after it.
+Every controller implements ``resize(n_workers, col_map=None, model=None,
+members=None)`` for elastic worker membership; observation width is
+strict after it.  ``members`` carries the GLOBAL worker ids of the new
+set — width-only controllers ignore it, the multi-tenant ``ps.JobHandle``
+records it in the job registry (its checkpoint groups restore by global
+id).
 """
 from __future__ import annotations
 
@@ -56,8 +60,10 @@ class FullSyncController:
     def observe(self, times, finished_mask=None):
         pass
 
-    def resize(self, n_workers: int, col_map=None, model=None):
-        """Elastic membership change: track the new worker count."""
+    def resize(self, n_workers: int, col_map=None, model=None,
+               members=None):
+        """Elastic membership change: track the new worker count
+        (width-only controllers ignore the global ``members`` ids)."""
         self.n = int(n_workers)
 
 
@@ -75,14 +81,43 @@ class StaticCutoffController(FullSyncController):
     def predict_cutoff(self) -> int:
         return self.c
 
-    def resize(self, n_workers: int, col_map=None, model=None):
-        super().resize(n_workers, col_map, model)
+    def resize(self, n_workers: int, col_map=None, model=None,
+               members=None):
+        super().resize(n_workers, col_map, model, members)
         if self._cutoff is not None:
             # clamp to the live width but keep the configured value, so a
             # transient shrink doesn't permanently lower the baseline
             self.c = min(self._cutoff, self.n)
         else:
             self.c = max(1, int(round(self.n * (1 - self.drop_frac))))
+
+
+class FirstKController(FullSyncController):
+    """Chen et al. (2016) backup-workers baseline: accept the first
+    ``n - b`` gradient arrivals BY COUNT, where ``b`` backup workers are
+    provisioned to absorb stragglers.
+
+    The distinction from :class:`StaticCutoffController` is the
+    parameterization: the backup COUNT is fixed capacity (Chen et al.
+    provision b extra machines), so a resize keeps ``b`` constant and the
+    cutoff moves with the live width — shrink a 32-worker job to 24 and a
+    4-backup config still accepts the first 20, not ``24 * (1 - 4/32)``.
+    Count-based acceptance never consults the runtime distribution, which
+    is exactly the error–runtime trade-off the paper's DMM controller
+    beats (tests/test_controllers.py races it on wall-clock-to-loss).
+    """
+
+    def __init__(self, n_workers: int, backup: Optional[int] = None,
+                 backup_frac: float = 0.04):
+        super().__init__(n_workers)
+        self.backup = (int(backup) if backup is not None
+                       else max(1, int(round(n_workers * backup_frac))))
+
+    def predict_cutoff(self) -> int:
+        return max(1, self.n - self.backup)
+
+    # resize: FullSyncController already tracks the live width; the backup
+    # count deliberately stays fixed (it is provisioned capacity).
 
 
 class ElfvingController(FullSyncController):
@@ -185,19 +220,58 @@ def _ring_append(ring, head, obs, *, mode: str):
     return _append_core(ring, head, obs, mode)
 
 
+def _observe_decide_core(params, ring, head, obs, key, norm_scale,
+                         mode: str, k_samples: int, lo: int):
+    """Trace-level body of one whole controller iteration: flush the
+    deferred observation (imputation included) into the ring, then run the
+    full decision (guide → transition → emission → sample → sort → argmax
+    → predictive moments) on the updated window.  Jitted directly for the
+    single-job hot path (:func:`_fused_observe_decide`) and vmapped over a
+    leading JOB axis for the multi-tenant batched path
+    (:func:`_batched_observe_decide`)."""
+    if mode != "none":
+        ring, head = _append_core(ring, head, obs, mode)
+    (cutoff, samples, pred_mu, pred_std,
+     pred_iter) = RuntimeModel._decide_core(
+        params, ring, head, key, norm_scale, k_samples, lo)
+    return ring, head, cutoff, samples, pred_mu, pred_std, pred_iter
+
+
 @functools.partial(jax.jit, static_argnames=("mode", "k_samples", "lo"))
 def _fused_observe_decide(params, ring, head, obs, key, norm_scale, *,
                           mode: str, k_samples: int, lo: int):
-    """ONE jit call for a whole controller iteration on the hot path:
-    flush the deferred observation (imputation included) into the ring,
-    then run the full decision (guide → transition → emission → sample →
-    sort → argmax → predictive moments) on the updated window.  The host
-    uploads one (n,) row + mask and fetches one int32 per SGD step."""
-    if mode != "none":
-        ring, head = _append_core(ring, head, obs, mode)
-    cutoff, samples, pred_mu, pred_std = RuntimeModel._decide_core(
-        params, ring, head, key, norm_scale, k_samples, lo)
-    return ring, head, cutoff, samples, pred_mu, pred_std
+    """ONE jit call for a whole controller iteration on the hot path: the
+    host uploads one (n,) row + mask and fetches one int32 per SGD step."""
+    return _observe_decide_core(params, ring, head, obs, key, norm_scale,
+                                mode, k_samples, lo)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "k_samples", "lo"))
+def _batched_observe_decide(params, rings, heads, obs, keys, norm_scales, *,
+                            mode: str, k_samples: int, lo: int):
+    """ONE jit call for J whole controller iterations (the multi-tenant
+    parameter server's tick): every operand carries a leading (J,) job
+    axis — stacked params, the (J, lag+1, n) ring stack, per-job heads,
+    observation rows/masks/moments, per-job PRNG keys and norm scales.
+    Dispatch cost is paid once instead of J times; the per-job cutoffs
+    come back as one (J,) int32 vector fetched lazily per job."""
+    def one(p, r, h, o, k, s):
+        return _observe_decide_core(p, r, h, o, k, s, mode, k_samples, lo)
+
+    return jax.vmap(one)(params, rings, heads, obs, keys, norm_scales)
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples", "lo"))
+def _batched_decide(params, rings, heads, keys, norm_scales, *,
+                    k_samples: int, lo: int):
+    """Decide-only twin of :func:`_batched_observe_decide` (mode="none"):
+    used to prefetch the first post-seeding decision for a batch of jobs
+    in one dispatch."""
+    def one(p, r, h, k, s):
+        return _observe_decide_core(p, r, h, None, k, s, "none", k_samples,
+                                    lo)
+
+    return jax.vmap(one)(params, rings, heads, keys, norm_scales)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -211,6 +285,33 @@ def _impute_key(seed: int, step: int):
     Offset so it can never collide with the prediction keys
     (``PRNGKey(seed + step)``)."""
     return jax.random.fold_in(jax.random.PRNGKey(seed + 1_000_003), step)
+
+
+def stacked_prng_keys(seeds) -> jax.Array:
+    """(J, 2) uint32 key stack, row j bit-identical to
+    ``jax.random.PRNGKey(seeds[j])`` under the default threefry impl.
+
+    Built host-side in one shot so a J-job tick costs ONE upload instead
+    of J ``PRNGKey`` dispatches (the dispatch overhead the batched
+    decision exists to amortize).  ``tests/test_ps_server.py`` pins the
+    bit-level equivalence."""
+    seeds = np.asarray(list(seeds), np.uint64)
+    out = np.empty((seeds.shape[0], 2), np.uint32)
+    # with x64 disabled (this repo's default) PRNGKey truncates the seed
+    # to its low 32 bits and the high word is 0
+    if jax.config.jax_enable_x64:
+        out[:, 0] = (seeds >> np.uint64(32)).astype(np.uint32)
+    else:
+        out[:, 0] = 0
+    out[:, 1] = (seeds & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return jnp.asarray(out)
+
+
+@jax.jit
+def _batched_impute_keys(base_keys, steps):
+    """vmap of ``fold_in`` — row j equals ``_impute_key(seed_j, step_j)``
+    when ``base_keys[j] == PRNGKey(seed_j + 1_000_003)``."""
+    return jax.vmap(jax.random.fold_in)(base_keys, steps)
 
 
 @dataclass
@@ -243,7 +344,8 @@ class CutoffController:
     _head: Optional[jax.Array] = None
     _count: int = 0
     _pending_pred: Optional[tuple] = None
-    _pending_decision: Optional[tuple] = None         # (step, c, s, mu, std)
+    _pending_decision: Optional[tuple] = None   # (step, c, s, mu, std, it)
+    _last_iter: Optional[object] = None         # E[x_(c)] of last decision
     _step: int = 0
 
     def __post_init__(self):
@@ -304,7 +406,7 @@ class CutoffController:
             self._count = min(self._count + 1, self._cap)
 
     def resize(self, n_workers: int, col_map=None,
-               model: Optional[RuntimeModel] = None):
+               model: Optional[RuntimeModel] = None, members=None):
         """Remap the lag window across a worker-set change.
 
         Survivor columns (``col_map`` entries >= 0) move column-exactly
@@ -329,6 +431,7 @@ class CutoffController:
         self.model = model
         self._pending_decision = None
         self._pending_pred = None
+        self._last_iter = None
         if self.backend == "numpy":
             self._window = []
             if rows is not None:
@@ -347,13 +450,14 @@ class CutoffController:
         """Issue the fused observe+decide for ``step`` (async dispatch —
         nothing blocks until the cutoff scalar is read)."""
         lo = order_stats.min_frac_floor(self.n, self.min_frac)
-        (self._ring, self._head, cutoff, samples, pred_mu,
-         pred_std) = _fused_observe_decide(
+        (self._ring, self._head, cutoff, samples, pred_mu, pred_std,
+         pred_iter) = _fused_observe_decide(
             self.model.params, self._ring, self._head, obs,
             jax.random.PRNGKey(self.seed + step),
             jnp.float32(self.model.norm_scale), mode=mode,
             k_samples=self.k_samples, lo=lo)
-        self._pending_decision = (step, cutoff, samples, pred_mu, pred_std)
+        self._pending_decision = (step, cutoff, samples, pred_mu, pred_std,
+                                  pred_iter)
 
     # -- decision -------------------------------------------------------
     def predict_cutoff(self) -> int:
@@ -373,17 +477,36 @@ class CutoffController:
                 mu.mean(axis=0),
                 np.sqrt(np.mean(std ** 2, axis=0) + mu.var(axis=0)),
                 samples)
-            return order_stats.optimal_cutoff(samples, self.min_frac)
+            c = order_stats.optimal_cutoff(samples, self.min_frac)
+            # lazy: the extra sort only runs if a scheduler actually asks
+            self._last_iter = ("lazy", samples, c)
+            return c
         if (self._pending_decision is None
                 or self._pending_decision[0] != self._step):
             # no decision in flight for this step (first decision after
             # warmup/seeding, or out-of-cadence call): dispatch one now
             self._dispatch_decision(None, "none", self._step)
-        _, cutoff, samples, pred_mu, pred_std = self._pending_decision
+        (_, cutoff, samples, pred_mu, pred_std,
+         pred_iter) = self._pending_decision
         self._pending_decision = None
         self._pending_pred = (pred_mu, pred_std, samples)
+        self._last_iter = pred_iter          # device scalar, fetched lazily
         # the ONLY host/device sync on the decision path: one int32
         return int(cutoff)
+
+    def predicted_iter_time(self):
+        """Posterior-predictive E[x_(c)] of the step just decided (raw
+        seconds) — what the multi-tenant scheduler ranks jobs by; None
+        before the first warmed-up decision.  The device backend gets it
+        free out of the fused decision's shared sort; the numpy backend
+        computes it here, on demand."""
+        if self._last_iter is None:
+            return None
+        if isinstance(self._last_iter, tuple):
+            _, samples, c = self._last_iter
+            self._last_iter = float(
+                np.sort(samples, axis=1)[:, c - 1].mean())
+        return float(self._last_iter)
 
     def predicted_order_stats(self):
         """(mean, std) of predicted order statistics for the next step.
@@ -609,7 +732,7 @@ class ElasticController:
 
     # -- resize protocol -------------------------------------------------
     def resize(self, n_workers: int, col_map=None,
-               model: Optional[RuntimeModel] = None):
+               model: Optional[RuntimeModel] = None, members=None):
         """Worker-set change: remap, fall back, schedule the refit.
 
         ``col_map`` as in :func:`remap_columns`.  If ``model`` (already

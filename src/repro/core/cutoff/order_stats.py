@@ -103,12 +103,36 @@ def throughput_curve_jax(samples) -> jnp.ndarray:
     return jnp.mean(c[None, :] / jnp.maximum(s, 1e-9), axis=0)
 
 
-def optimal_cutoff_jax_from_floor(samples, lo: int) -> jnp.ndarray:
-    """Throughput argmax restricted to 0-based floor ``lo`` (static int)."""
-    omega = throughput_curve_jax(samples)
-    n = omega.shape[0]
+def _cutoff_from_sorted(s, lo: int) -> jnp.ndarray:
+    """Throughput argmax over PRE-SORTED samples (K, n), 0-based floor
+    ``lo``.  The one copy of the omega/argmax math every jax cutoff entry
+    point shares — bit-identity between the single-job and batched
+    decision paths is structural, not by parallel edit."""
+    n = s.shape[1]
+    cs = jnp.arange(1, n + 1, dtype=s.dtype)
+    omega = jnp.mean(cs[None, :] / jnp.maximum(s, 1e-9), axis=0)
     c = jnp.argmax(omega[lo:]) + lo + 1
     return jnp.minimum(c, n).astype(jnp.int32)
+
+
+def optimal_cutoff_jax_from_floor(samples, lo: int) -> jnp.ndarray:
+    """Throughput argmax restricted to 0-based floor ``lo`` (static int)."""
+    return _cutoff_from_sorted(sorted_rows_jax(samples), lo)
+
+
+def cutoff_and_iter_jax(samples, lo: int):
+    """(optimal cutoff, E[x_(c)] at that cutoff) from ONE shared sort.
+
+    The cutoff is bit-identical to ``optimal_cutoff_jax_from_floor``
+    (same ``_cutoff_from_sorted`` body); the second output is the
+    posterior-predictive iteration wall time under the decision — what a
+    multi-tenant scheduler ranks jobs by (shortest-predicted-step-first)
+    without a second inference pass.
+    """
+    s = sorted_rows_jax(samples)
+    c = _cutoff_from_sorted(s, lo)
+    pred_iter = jnp.mean(jnp.take(s, c - 1, axis=1))
+    return c, pred_iter
 
 
 def optimal_cutoff_jax(samples, min_frac: float = 0.0) -> jnp.ndarray:

@@ -154,9 +154,17 @@ class RuntimeModel:
         RNG layout mirrors ``_predict`` (split(key, 4), k1/k2/k3) so the
         samples match the host reference path draw for draw.
 
+        Every operand is either traced data or a job-independent static
+        (``k_samples``, ``lo``), so the whole body vmaps over a leading
+        JOB axis — ``controller._batched_observe_decide`` stacks J jobs'
+        (params, ring, head, key, norm_scale) and runs this once per tick
+        for the multi-tenant parameter server (``repro.ps``).
+
         Returns (cutoff int32 scalar, samples (K, n) raw,
         pred_mu (n,), pred_std (n,) — the aggregated predictive moments the
-        censored-imputation step needs).
+        censored-imputation step needs — and pred_iter, the
+        posterior-predictive E[x_(c)] wall time of the decided step, which
+        the multi-job scheduler ranks by).
         """
         window = jnp.roll(ring, -head, axis=0) / norm_scale
         k1, k2, k3, _ = jax.random.split(key, 4)
@@ -166,11 +174,34 @@ class RuntimeModel:
         emu, estd = D.emission(params["dmm"], z_next)     # (K, n)
         x_next = emu + estd * jax.random.normal(k3, emu.shape)
         samples = x_next * norm_scale
-        cutoff = order_stats.optimal_cutoff_jax_from_floor(samples, lo)
+        cutoff, pred_iter = order_stats.cutoff_and_iter_jax(samples, lo)
         pred_mu = jnp.mean(emu, axis=0) * norm_scale
         # mixture-variance law over the K mixture components:
         # Var = E[std^2] + Var[mu] (E[std]^2 under-disperses the tail)
         pred_std = jnp.sqrt(jnp.mean(estd ** 2, axis=0)
                             + jnp.var(emu, axis=0)) * norm_scale
-        return cutoff, samples, pred_mu, pred_std
+        return cutoff, samples, pred_mu, pred_std, pred_iter
+
+
+def stack_models(models) -> Tuple[dict, jnp.ndarray]:
+    """Stack J same-architecture RuntimeModels for the vmapped decision.
+
+    Returns (stacked params pytree with a leading (J,) job axis,
+    norm_scales (J,) f32).  All models must share (n_workers, lag, z_dim,
+    hidden) — the job axis batches DECISIONS, it does not pad shapes; the
+    multi-tenant server buckets jobs by shape before stacking.
+    """
+    if not models:
+        raise ValueError("stack_models needs at least one model")
+    shape = (models[0].n_workers, models[0].lag, models[0].z_dim,
+             models[0].hidden)
+    for m in models[1:]:
+        got = (m.n_workers, m.lag, m.z_dim, m.hidden)
+        if got != shape:
+            raise ValueError(f"cannot stack RuntimeModels of shapes "
+                             f"{shape} and {got}")
+    params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[m.params for m in models])
+    scales = jnp.asarray([m.norm_scale for m in models], jnp.float32)
+    return params, scales
 

@@ -48,22 +48,30 @@ def _rnn_sweep(p, xs):
     return hs
 
 
+def _shifted_sweeps(guide_params, xt):
+    """Both RNN sweeps over xt (T, B, n), shifted one step so that
+    ``h_left[t]`` summarizes x_{<t} and ``h_right[t]`` summarizes x_{>t}
+    (the structured left-right conditioning of §3.1.3).  Shared by the
+    ELBO-path ``guide_sample`` and the decision-path
+    ``guide_sample_broadcast``; returns (h_left, h_right), each
+    (T, B, hidden)."""
+    h_left_all = _rnn_sweep(guide_params["rnn_left"], xt)
+    h_right_all = _rnn_sweep(guide_params["rnn_right"], xt[::-1])[::-1]
+    zeros = jnp.zeros((1,) + h_left_all.shape[1:])
+    h_left = jnp.concatenate([zeros, h_left_all[:-1]], axis=0)
+    h_right = jnp.concatenate([h_right_all[1:], zeros], axis=0)
+    return h_left, h_right
+
+
 def guide_sample(guide_params, x_window, key, z0=None):
     """Sample a z trajectory for one window.
 
     x_window: (B, T, n) normalized runtimes.
     Returns (zs (B, T, zd), mus, stds) — everything needed for the ELBO.
     """
-    from repro.core.runtime_model import dmm as D
     B, T, n = x_window.shape
     xt = jnp.moveaxis(x_window, 1, 0)             # (T, B, n)
-    h_left_all = _rnn_sweep(guide_params["rnn_left"], xt)
-    h_right_all = _rnn_sweep(guide_params["rnn_right"], xt[::-1])[::-1]
-    # h_left[t] must summarize x_{<t}; h_right[t] summarizes x_{>t}
-    hidden = h_left_all.shape[-1]
-    zeros = jnp.zeros((1, B, hidden))
-    h_left = jnp.concatenate([zeros, h_left_all[:-1]], axis=0)
-    h_right = jnp.concatenate([h_right_all[1:], zeros], axis=0)
+    h_left, h_right = _shifted_sweeps(guide_params, xt)
 
     zd = guide_params["mu"][0]["w"].shape[1]
     if z0 is None:
@@ -111,14 +119,9 @@ def guide_sample_broadcast(guide_params, x_window, key, k_samples: int):
     """
     T, n = x_window.shape
     xt = x_window[:, None, :]                     # (T, 1, n)
-    h_left_all = _rnn_sweep(guide_params["rnn_left"], xt)
-    h_right_all = _rnn_sweep(guide_params["rnn_right"], xt[::-1])[::-1]
-    hidden = h_left_all.shape[-1]
-    zeros = jnp.zeros((1, 1, hidden))
-    # h_left[t] summarizes x_{<t}, h_right[t] summarizes x_{>t}; only the
-    # sum enters h_out, so precompute it once for the whole window
-    h_sum = (jnp.concatenate([zeros, h_left_all[:-1]], axis=0)
-             + jnp.concatenate([h_right_all[1:], zeros], axis=0))
+    h_left, h_right = _shifted_sweeps(guide_params, xt)
+    # only the sum enters h_out, so precompute it once for the window
+    h_sum = h_left + h_right
 
     zd = guide_params["mu"][0]["w"].shape[1]
     keys = jax.random.split(key, T)

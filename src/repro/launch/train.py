@@ -436,7 +436,10 @@ class Trainer:
                 f"{self.mask_agg!r} slices the batch into B//W per-worker "
                 f"shards — pick a worker count that divides {B})")
         if hasattr(self.controller, "resize"):
-            self.controller.resize(n_new, col_map=col_map)
+            # members: GLOBAL worker ids — part of the controller resize
+            # protocol; width-only controllers ignore them, the
+            # multi-tenant handle records them for restore-by-global-id
+            self.controller.resize(n_new, col_map=col_map, members=members)
         elif getattr(self.controller, "n", n_new) != n_new:
             raise ValueError(
                 f"controller {type(self.controller).__name__} cannot "

@@ -1,0 +1,17 @@
+"""repro.ps — the multi-tenant parameter-server subsystem.
+
+One shared cluster, J concurrent training jobs, ONE device-resident
+decision path: per-job lag windows live stacked in a (J, lag+1, n) ring
+and every tick dispatches a single vmapped fused observe+decide instead
+of J separate jits (src/repro/core/README.md has the full contract).
+"""
+from repro.ps.scheduler import (JobView, PriorityScheduler,
+                                RoundRobinScheduler, ShortestStepScheduler,
+                                job_views, make_scheduler)
+from repro.ps.server import JobHandle, JobRegistry, PSJob, PSServer
+
+__all__ = [
+    "JobHandle", "JobRegistry", "PSJob", "PSServer",
+    "JobView", "RoundRobinScheduler", "PriorityScheduler",
+    "ShortestStepScheduler", "job_views", "make_scheduler",
+]

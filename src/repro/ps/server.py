@@ -1,0 +1,745 @@
+"""Multi-tenant parameter server: batched device decisions for J jobs.
+
+A production cluster runs many training jobs at once, and each one needs
+the paper's cutoff decision every step.  Dispatching J separate fused
+jits per tick pays the dispatch overhead J times for tiny per-job
+compute; this module multiplexes every job through ONE vmapped decision:
+
+  * :class:`JobRegistry` — admit/evict/resize bookkeeping.  Each job owns
+    its :class:`~repro.core.runtime_model.api.RuntimeModel`, its worker
+    membership, a priority, and a checkpoint-group name.
+  * :class:`PSServer` — the decision plane.  Jobs of the same decision
+    shape (n_workers, lag, k_samples, min_frac floor) share a *bucket*
+    whose lag windows live stacked in a ``(J_b, lag+1, n)`` device ring;
+    ``flush()`` dispatches one ``controller._batched_observe_decide`` per
+    (bucket, imputation-mode) group per tick, and ``predict_cutoff`` only
+    materializes the job's int32 lazily out of the batched result.
+  * :class:`JobHandle` — a controller-protocol facade (`predict_cutoff` /
+    `observe` / `resize` / `seed_window` / `window_array`), so one
+    ``launch.train.Trainer`` per job drives the shared server unchanged,
+    checkpointing included (the ``"ctl"`` group works verbatim).
+
+Per-job elasticity follows the :class:`~repro.core.controller
+.ElasticController` protocol: ``resize`` without a refit model remaps the
+job's window (survivors column-exact), detaches it from the batched path
+onto a warm-seeded Elfving fallback, and refits the DMM from the
+surviving trace once ``refit_fresh`` fresh observations arrive — then the
+job rejoins its (new) bucket.
+
+Semantics contract: a ``PSServer`` with J=1 produces the IDENTICAL cutoff
+sequence as a bare ``CutoffController(backend="device")`` over a seeded
+run (tests/test_ps_server.py), and J>1 jobs match J looped single-job
+controllers to f32-window precision — batching amortizes dispatch, it
+never changes the decision.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as C
+from repro.core.cutoff import order_stats
+from repro.core.runtime_model.api import RuntimeModel, stack_models
+
+
+# ---------------------------------------------------------------------------
+# Gather-in-jit batched entry: service an arbitrary subset of a bucket in
+# ONE dispatch (gather rows -> vmapped observe+decide -> scatter back).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "k_samples", "lo"))
+def _subset_observe_decide(params, rings, heads, idx, obs, keys, scales, *,
+                           mode: str, k_samples: int, lo: int):
+    p = jax.tree.map(lambda x: x[idx], params)
+    r, h, cut, samp, mu, std, it = C._batched_observe_decide(
+        p, rings[idx], heads[idx], obs, keys, scales[idx],
+        mode=mode, k_samples=k_samples, lo=lo)
+    return rings.at[idx].set(r), heads.at[idx].set(h), cut, samp, mu, std, it
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples", "lo"))
+def _subset_decide(params, rings, heads, idx, keys, scales, *,
+                   k_samples: int, lo: int):
+    # decide-only never mutates the ring, so return just the decision —
+    # scattering identical rows back would copy the whole bucket stack
+    p = jax.tree.map(lambda x: x[idx], params)
+    _, _, cut, samp, mu, std, it = C._batched_decide(
+        p, rings[idx], heads[idx], keys, scales[idx],
+        k_samples=k_samples, lo=lo)
+    return cut, samp, mu, std, it
+
+
+def _seed_ring(rows: np.ndarray, cap: int, n: int):
+    """Build the (cap, n) f32 ring + head a fresh controller would reach
+    by appending ``rows`` with full masks — without cap device dispatches.
+    Plain appends write the f32 times verbatim, so this is bit-exact."""
+    rows = np.asarray(rows, np.float32)[-cap:]
+    ring = np.zeros((cap, n), np.float32)
+    m = rows.shape[0]
+    ring[:m] = rows
+    return ring, m % cap, min(m, cap)
+
+
+# ---------------------------------------------------------------------------
+# Job records + registry.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PSJob:
+    """One tenant of the shared parameter server (registry record)."""
+    job_id: str
+    model: Optional[RuntimeModel]
+    members: np.ndarray                 # global worker ids
+    priority: float
+    admit_order: int
+    k_samples: int
+    min_frac: float
+    seed: int
+    ckpt_group: str
+
+    width: int = 0                      # current worker count
+    step: int = 0                       # controller step counter
+    count: int = 0                      # rows in the lag window
+    mode: str = "dmm"                   # "dmm" | "fallback"
+    slot: int = -1                      # row in the bucket stack
+    bucket_sig: Optional[tuple] = None
+    fallback: Optional[C.ElfvingController] = None
+    fresh: int = 0                      # observations since last (re)fit
+    resize_count: int = 0
+    fallback_steps: int = 0
+    trace: list = field(default_factory=list, repr=False)  # refit data
+    # decision plumbing (device refs, fetched lazily)
+    pending: Optional[tuple] = None     # (dstep, row, outputs dict)
+    pending_pred: Optional[tuple] = None  # (mu_src, std_src, samp_src, row)
+    last_iter: Optional[tuple] = None   # (iter_array, row)
+    queued: bool = False
+    # architecture template for refits (widths change, shapes don't)
+    lag: int = 20
+    z_dim: int = 32
+    hidden: int = 64
+
+    @property
+    def cap(self) -> int:
+        return self.lag + 1
+
+    @property
+    def warmed_up(self) -> bool:
+        return self.mode == "dmm" and self.count >= self.cap
+
+
+class JobRegistry:
+    """Admission bookkeeping for the multi-tenant server.
+
+    Owns the job records: who is admitted, their RuntimeModel, worker
+    membership, scheduling priority, and per-job checkpoint-group name
+    (``ps/<job_id>``).  The decision-plane state (stacked rings, pending
+    batched outputs) belongs to :class:`PSServer`.
+    """
+
+    def __init__(self):
+        self._jobs: Dict[str, PSJob] = {}
+        self._admitted = 0
+
+    def admit(self, job_id: str, model: RuntimeModel, *,
+              members=None, priority: float = 0.0, k_samples: int = 64,
+              min_frac: float = 0.5, seed: int = 0) -> PSJob:
+        if job_id in self._jobs:
+            raise ValueError(f"job {job_id!r} already admitted")
+        if model.params is None:
+            raise ValueError(f"job {job_id!r}: admit a fitted RuntimeModel")
+        members = (np.asarray(members, int) if members is not None
+                   else np.arange(model.n_workers))
+        if members.shape != (model.n_workers,):
+            raise ValueError(
+                f"job {job_id!r}: {members.shape[0]} members for a "
+                f"width-{model.n_workers} model")
+        job = PSJob(job_id=job_id, model=model, members=members,
+                    priority=float(priority), admit_order=self._admitted,
+                    k_samples=int(k_samples), min_frac=float(min_frac),
+                    seed=int(seed), ckpt_group=f"ps/{job_id}",
+                    width=model.n_workers, lag=model.lag,
+                    z_dim=model.z_dim, hidden=model.hidden)
+        self._jobs[job_id] = job
+        self._admitted += 1
+        return job
+
+    def evict(self, job_id: str) -> PSJob:
+        return self._jobs.pop(job_id)
+
+    def __getitem__(self, job_id: str) -> PSJob:
+        return self._jobs[job_id]
+
+    def __contains__(self, job_id: str) -> bool:
+        return job_id in self._jobs
+
+    def __len__(self) -> int:
+        return len(self._jobs)
+
+    def ids(self) -> List[str]:
+        """Admitted job ids in admission order."""
+        return [j.job_id for j in
+                sorted(self._jobs.values(), key=lambda j: j.admit_order)]
+
+    def jobs(self) -> List[PSJob]:
+        return [self._jobs[i] for i in self.ids()]
+
+    def set_priority(self, job_id: str, priority: float):
+        self._jobs[job_id].priority = float(priority)
+
+
+# ---------------------------------------------------------------------------
+# The decision plane.
+# ---------------------------------------------------------------------------
+
+
+class _Bucket:
+    """Jobs of one decision shape, windows stacked in ONE device ring."""
+
+    def __init__(self, cap: int, n: int):
+        self.cap, self.n = cap, n
+        self.jobs: List[PSJob] = []
+        self.rings = jnp.zeros((0, cap, n), jnp.float32)
+        self.heads = jnp.zeros((0,), jnp.int32)
+        self._stacked = None            # (params, scales) cache
+
+    def stacked(self):
+        if self._stacked is None:
+            self._stacked = stack_models([j.model for j in self.jobs])
+        return self._stacked
+
+    def dirty(self):
+        self._stacked = None
+
+
+class PSServer:
+    """The multi-tenant decision plane (see module docstring).
+
+    Tick protocol (what ``launch.multi_job.MultiJobDriver`` runs)::
+
+        server.prefetch(serviced)        # cold decisions, one dispatch
+        for job_id in serviced:          # scheduler's order
+            c = server.predict_cutoff(job_id)   # lazy int32 fetch
+            ... run the job's train step with the bit array ...
+            server.observe(job_id, times, mask)  # enqueues
+        server.flush()                   # ONE vmapped dispatch per
+                                         # (bucket, mode) group
+
+    ``flush`` is also called implicitly whenever a job with a queued
+    observation is asked to predict, so a ``JobHandle`` behaves like a
+    plain controller even without a driver calling ``flush``.
+    """
+
+    def __init__(self, registry: Optional[JobRegistry] = None, *,
+                 history: int = 512, refit_steps: int = 150,
+                 refit_batch: int = 8, refit_fresh: int = 4,
+                 fallback_warmup: int = 3):
+        self.registry = registry if registry is not None else JobRegistry()
+        self.history = history
+        self.refit_steps = refit_steps
+        self.refit_batch = refit_batch
+        self.refit_fresh = refit_fresh
+        self.fallback_warmup = fallback_warmup
+        self._buckets: Dict[tuple, _Bucket] = {}
+        self._queue: List[dict] = []
+        self.dispatches = 0             # fused decision dispatches issued
+        self.ticks = 0                  # flush() calls that dispatched
+
+    # -- admission ------------------------------------------------------
+    def admit(self, job_id: str, model: RuntimeModel, *, window=None,
+              members=None, priority: float = 0.0, k_samples: int = 64,
+              min_frac: float = 0.5, seed: int = 0) -> "JobHandle":
+        """Admit a job; ``window`` warm-starts its lag window (rows of
+        raw runtimes, as ``CutoffController.seed_window``)."""
+        self.flush()
+        job = self.registry.admit(job_id, model, members=members,
+                                  priority=priority, k_samples=k_samples,
+                                  min_frac=min_frac, seed=seed)
+        self._place(job, window)
+        if window is not None:
+            job.trace = [np.asarray(r, np.float64)
+                         for r in np.asarray(window)][-self.history:]
+        return JobHandle(self, job_id)
+
+    def evict(self, job_id: str) -> dict:
+        """Remove a job; returns its final window (or None) and trace."""
+        self.flush()
+        job = self.registry[job_id]
+        window = None
+        if job.mode == "dmm" and job.count > 0:
+            window = self.window_array(job_id)
+        if job.bucket_sig is not None:
+            self._remove(job)
+        self.registry.evict(job_id)
+        return {"window": window, "trace": np.array(job.trace)}
+
+    def handle(self, job_id: str) -> "JobHandle":
+        if job_id not in self.registry:
+            raise KeyError(job_id)
+        return JobHandle(self, job_id)
+
+    # -- bucket plumbing ------------------------------------------------
+    def _sig(self, job: PSJob) -> tuple:
+        """The full decision shape: window dims, sampling statics, AND
+        the model architecture — two same-width jobs with different
+        (z_dim, hidden) cannot share a param stack."""
+        lo = order_stats.min_frac_floor(job.width, job.min_frac)
+        return (job.width, job.cap, job.k_samples, lo, job.z_dim,
+                job.hidden)
+
+    def _place(self, job: PSJob, window=None):
+        """Insert a dmm-mode job into its shape bucket, seeding its ring."""
+        sig = self._sig(job)
+        b = self._buckets.get(sig)
+        if b is None:
+            b = self._buckets[sig] = _Bucket(job.cap, job.width)
+        rows = np.asarray(window, np.float64) if window is not None else None
+        if rows is not None and rows.ndim != 2:
+            raise ValueError(f"seed window must be (T, n), got {rows.shape}")
+        if rows is not None and rows.shape[1] != job.width:
+            raise ValueError(f"seed window width {rows.shape[1]} != "
+                             f"job width {job.width}")
+        ring, head, count = _seed_ring(
+            rows if rows is not None else np.zeros((0, job.width)),
+            job.cap, job.width)
+        b.rings = jnp.concatenate([b.rings, jnp.asarray(ring)[None]])
+        b.heads = jnp.concatenate(
+            [b.heads, jnp.asarray([head], jnp.int32)])
+        job.slot = len(b.jobs)
+        b.jobs.append(job)
+        b.dirty()
+        job.bucket_sig = sig
+        job.count = count
+        job.mode = "dmm"
+
+    def _remove(self, job: PSJob):
+        b = self._buckets[job.bucket_sig]
+        i = job.slot
+        keep = np.array([k for k in range(len(b.jobs)) if k != i])
+        if keep.size:
+            ka = jnp.asarray(keep)
+            b.rings = b.rings[ka]
+            b.heads = b.heads[ka]
+        else:
+            b.rings = b.rings[:0]
+            b.heads = b.heads[:0]
+        b.jobs.pop(i)
+        for k, other in enumerate(b.jobs):
+            other.slot = k
+        b.dirty()
+        job.bucket_sig = None
+        job.slot = -1
+
+    # -- window diagnostics / checkpointing -----------------------------
+    def window_array(self, job_id: str) -> np.ndarray:
+        """The job's lag window, oldest row first (host copy).
+
+        Raises ValueError while empty — the Trainer's checkpoint path
+        relies on this to skip cold controllers."""
+        self.flush()
+        job = self.registry[job_id]
+        if job.mode != "dmm":
+            if not job.trace:
+                raise ValueError("window is empty")
+            return np.stack(job.trace[-job.cap:])
+        if job.count == 0:
+            raise ValueError("window is empty")
+        b = self._buckets[job.bucket_sig]
+        head = int(b.heads[job.slot])
+        w = np.asarray(jnp.roll(b.rings[job.slot], -head, axis=0))
+        return w[-job.count:] if job.count < job.cap else w
+
+    def seed_window(self, job_id: str, rows: np.ndarray):
+        """Warm-start the job's window from recorded traces (checkpoint
+        restore path)."""
+        self.flush()
+        job = self.registry[job_id]
+        rows = np.asarray(rows, np.float64)
+        if rows.shape[1] != job.width:
+            raise ValueError(f"seed rows have width {rows.shape[1]}, "
+                             f"job width is {job.width}")
+        job.trace = (job.trace + [r for r in rows])[-self.history:]
+        if job.mode != "dmm":
+            for r in rows[-50:]:
+                job.fallback.buf.append(np.asarray(r, np.float64))
+            return
+        b = self._buckets[job.bucket_sig]
+        old_head = int(b.heads[job.slot])
+        old = np.asarray(b.rings[job.slot])
+        old = np.roll(old, -old_head, axis=0)
+        if job.count < job.cap:
+            old = old[job.cap - job.count:] if job.count else old[:0]
+        merged = np.concatenate([old, np.asarray(rows, np.float32)])
+        ring, head, count = _seed_ring(merged, job.cap, job.width)
+        b.rings = b.rings.at[job.slot].set(jnp.asarray(ring))
+        b.heads = b.heads.at[job.slot].set(head)
+        job.count = count
+        job.pending = None
+        job.pending_pred = None
+
+    def checkpoint_group(self, job_id: str) -> Dict[str, np.ndarray]:
+        """The job's persistable controller state (``"ctl"``-group shape:
+        width, members, step, window), under its registry group name."""
+        job = self.registry[job_id]
+        grp = {"n": np.int64(job.width),
+               "members": np.asarray(job.members, np.int64),
+               "step": np.int64(job.step)}
+        try:
+            grp["window"] = np.asarray(self.window_array(job_id), np.float64)
+        except ValueError:
+            pass
+        return grp
+
+    def checkpoint_groups(self) -> Dict[str, Dict[str, np.ndarray]]:
+        return {self.registry[i].ckpt_group: self.checkpoint_group(i)
+                for i in self.registry.ids()}
+
+    # -- the decision path ----------------------------------------------
+    def predict_cutoff(self, job_id: str) -> int:
+        job = self.registry[job_id]
+        if job.queued:
+            self.flush()
+        job.step += 1
+        if job.mode == "fallback":
+            job.fallback_steps += 1
+            return min(job.fallback.predict_cutoff(), job.width)
+        if not job.warmed_up:
+            job.pending_pred = None
+            return job.width
+        if job.pending is None or job.pending[0] != job.step:
+            # first decision after seeding/rejoin, or out-of-cadence
+            # call: dispatch one now (prefetch() batches this for a
+            # whole service set)
+            self._decide_jobs([job], [job.step])
+        _, row, out = job.pending
+        job.pending = None
+        job.pending_pred = (out["mu"], out["std"], out["samples"], row)
+        job.last_iter = (out["iter"], row)
+        # the only per-job host sync on the hot path: one int32
+        return int(out["cutoff"][row])
+
+    def prefetch(self, job_ids=None):
+        """Batch the decide-only dispatch for every warmed job in
+        ``job_ids`` (default: all) that has no decision in flight for its
+        next step — one fused call per bucket instead of one per job."""
+        ids = job_ids if job_ids is not None else self.registry.ids()
+        jobs = [self.registry[i] for i in ids]
+        need = [j for j in jobs
+                if j.mode == "dmm" and j.warmed_up and not j.queued
+                and (j.pending is None or j.pending[0] != j.step + 1)]
+        by_bucket: Dict[tuple, list] = {}
+        for j in need:
+            by_bucket.setdefault(j.bucket_sig, []).append(j)
+        for group in by_bucket.values():
+            self._decide_jobs(group, [j.step + 1 for j in group])
+
+    def _decide_jobs(self, jobs: List[PSJob], dsteps: List[int]):
+        """Decide-only batched dispatch for same-bucket jobs.  ``dsteps``
+        are the decision steps: the caller's current step when invoked
+        from ``predict_cutoff`` (which already incremented), step+1 when
+        prefetching."""
+        b = self._buckets[jobs[0].bucket_sig]
+        sig = jobs[0].bucket_sig
+        idx = jnp.asarray([j.slot for j in jobs], jnp.int32)
+        keys = C.stacked_prng_keys(
+            [j.seed + d for j, d in zip(jobs, dsteps)])
+        params, scales = b.stacked()
+        lo = sig[3]
+        cut, samp, mu, std, it = _subset_decide(
+            params, b.rings, b.heads, idx, keys, scales,
+            k_samples=sig[2], lo=lo)
+        self.dispatches += 1
+        out = {"cutoff": cut, "samples": samp, "mu": mu, "std": std,
+               "iter": it}
+        for row, (j, d) in enumerate(zip(jobs, dsteps)):
+            j.pending = (d, row, out)
+
+    def observe(self, job_id: str, times, finished_mask=None):
+        job = self.registry[job_id]
+        t = np.asarray(times, np.float64)
+        if t.shape != (job.width,):
+            raise ValueError(
+                f"job {job_id!r}: observe got {t.shape[0]} runtimes at "
+                f"width {job.width}; resize() before the resized step")
+        mask = (np.ones(job.width, bool) if finished_mask is None
+                else np.asarray(finished_mask, bool))
+        # rolling imputed trace: refit training data (plain imputation at
+        # the observed cutoff time, as ElasticController keeps it)
+        row = np.where(mask, t, t[mask].max()) if (
+            mask.any() and not mask.all()) else t
+        job.trace = (job.trace + [row])[-self.history:]
+        job.fresh += 1
+        if job.mode == "fallback":
+            job.fallback.observe(times, finished_mask)
+            self._maybe_refit(job)
+            return
+        if job.queued:
+            self.flush()        # one observation in flight per job, max
+        t32 = t.astype(np.float32)
+        # mirror CutoffController.observe's mode selection exactly: a
+        # full-sync observation takes the plain append even when moments
+        # are pending (cheaper, and equivalence-by-construction with the
+        # single-job reference rather than by where-merge accident)
+        mode = ("plain" if job.pending_pred is None or bool(mask.all())
+                else "censored")
+        if job.pending_pred is not None:
+            # moments stay valid for the queued imputation; the sample
+            # cache does not survive the window change
+            job.pending_pred = job.pending_pred[:2] + (None,
+                                                       job.pending_pred[3])
+        job.count = min(job.count + 1, job.cap)
+        if job.warmed_up:
+            self._queue.append({
+                "job": job, "times": t32, "mask": mask, "mode": mode,
+                "dstep": job.step + 1,
+                "pred": (job.pending_pred[:2] + (job.pending_pred[3],)
+                         if mode == "censored" else None)})
+            job.queued = True
+        else:
+            # warmup: plain append straight into the job's ring slot
+            b = self._buckets[job.bucket_sig]
+            obs = {"times": jnp.asarray(t32),
+                   "mask": jnp.asarray(mask)}
+            ring, head = C._ring_append(b.rings[job.slot],
+                                        b.heads[job.slot], obs, mode="plain")
+            b.rings = b.rings.at[job.slot].set(ring)
+            b.heads = b.heads.at[job.slot].set(head)
+
+    def flush(self) -> int:
+        """Dispatch every queued observation+decision: ONE vmapped fused
+        call per (bucket, imputation-mode) group.  Returns the number of
+        dispatches issued."""
+        if not self._queue:
+            return 0
+        queue, self._queue = self._queue, []
+        groups: Dict[tuple, list] = {}
+        for e in queue:
+            groups.setdefault((e["job"].bucket_sig, e["mode"]),
+                              []).append(e)
+        issued = 0
+        for (sig, mode), entries in groups.items():
+            b = self._buckets[sig]
+            jobs = [e["job"] for e in entries]
+            idx = jnp.asarray([j.slot for j in jobs], jnp.int32)
+            obs = {"times": jnp.asarray(np.stack(
+                       [e["times"] for e in entries])),
+                   "mask": jnp.asarray(np.stack(
+                       [e["mask"] for e in entries]))}
+            if mode == "censored":
+                obs["mu"] = self._stack_pred(entries, 0)
+                obs["std"] = self._stack_pred(entries, 1)
+                base = C.stacked_prng_keys(
+                    [j.seed + 1_000_003 for j in jobs])
+                obs["key"] = C._batched_impute_keys(
+                    base, jnp.asarray([j.step for j in jobs], jnp.uint32))
+            keys = C.stacked_prng_keys(
+                [j.seed + e["dstep"] for j, e in zip(jobs, entries)])
+            params, scales = b.stacked()
+            (b.rings, b.heads, cut, samp, mu, std, it) = (
+                _subset_observe_decide(
+                    params, b.rings, b.heads, idx, obs, keys, scales,
+                    mode=mode, k_samples=sig[2], lo=sig[3]))
+            issued += 1
+            out = {"cutoff": cut, "samples": samp, "mu": mu, "std": std,
+                   "iter": it}
+            for row, (j, e) in enumerate(zip(jobs, entries)):
+                j.pending = (e["dstep"], row, out)
+                j.queued = False
+        self.dispatches += issued
+        self.ticks += 1
+        return issued
+
+    @staticmethod
+    def _stack_pred(entries, which: int) -> jnp.ndarray:
+        """(m, n) predictive moments for a censored group.
+
+        Fast path: every entry's moments are rows of the SAME previous
+        batched output in stack order (the steady-state tick) — pass that
+        array through untouched.  Otherwise gather row by row."""
+        srcs = [e["pred"][which] for e in entries]
+        rows = [e["pred"][2] for e in entries]
+        first = srcs[0]
+        same = all(s is first for s in srcs)
+        if (same and first.ndim == 2 and len(rows) == first.shape[0]
+                and rows == list(range(len(rows)))):
+            return first
+        return jnp.stack([s[r] for s, r in zip(srcs, rows)])
+
+    # -- diagnostics -----------------------------------------------------
+    def predicted_iter_time(self, job_id: str) -> Optional[float]:
+        """Posterior-predictive E[x_(c)] of the job's latest decision (raw
+        seconds) — the shortest-predicted-step-first scheduler's key.
+        None before the first warmed-up decision (and in fallback mode,
+        where the analytic controller has no sample cloud)."""
+        job = self.registry[job_id]
+        if job.last_iter is None:
+            return None
+        arr, row = job.last_iter
+        return float(arr[row])
+
+    def predicted_order_stats(self, job_id: str):
+        job = self.registry[job_id]
+        if job.pending_pred is None or job.pending_pred[2] is None:
+            return None
+        samples = np.asarray(job.pending_pred[2][job.pending_pred[3]])
+        return order_stats.mc_order_stats(samples)
+
+    # -- elasticity ------------------------------------------------------
+    def resize(self, job_id: str, n_workers: int, col_map=None,
+               model: Optional[RuntimeModel] = None, members=None):
+        """Per-job worker-set change, ElasticController protocol: remap
+        the window (survivors column-exact), then either swap in a
+        ``model`` fitted at the new width (job stays on the batched DMM
+        path) or degrade to a warm-seeded Elfving fallback until the
+        refit lands (``_maybe_refit``)."""
+        self.flush()
+        job = self.registry[job_id]
+        n_new = int(n_workers)
+        if (n_new == job.width and col_map is None and model is None
+                and members is None):
+            return          # idempotent: re-asserting the current width
+                            # must not degrade a healthy DMM job
+        if model is not None and model.n_workers != n_new:
+            raise ValueError(
+                f"resize({n_new}) got a RuntimeModel of width "
+                f"{model.n_workers}; refit it for the new width first")
+        rows = None
+        if job.mode == "dmm" and job.count > 0:
+            rows = self.window_array(job_id)
+        if job.bucket_sig is not None:
+            self._remove(job)
+        if job.trace:
+            job.trace = [r for r in C.remap_columns(
+                np.stack(job.trace), n_new, col_map)]
+        if rows is not None:
+            rows = C.remap_columns(np.asarray(rows, np.float64), n_new,
+                                   col_map)
+        elif job.trace:
+            rows = np.stack(job.trace[-job.cap:])
+        job.width = n_new
+        job.members = self._resized_members(job.members, n_new, col_map,
+                                            members)
+        job.resize_count += 1
+        job.fresh = 0
+        job.pending = None
+        job.pending_pred = None
+        job.last_iter = None
+        if model is not None:
+            job.model = model
+            self._place(job, rows)
+            return
+        job.model = None
+        job.mode = "fallback"
+        job.count = 0
+        job.fallback = C.ElfvingController(
+            n_new, warmup=self.fallback_warmup, min_frac=job.min_frac)
+        for r in job.trace[-50:]:
+            job.fallback.buf.append(np.asarray(r, np.float64))
+
+    @staticmethod
+    def _resized_members(old: np.ndarray, n_new: int, col_map,
+                         members) -> np.ndarray:
+        """GLOBAL worker ids across a resize.  Survivors keep their ids
+        (via ``col_map``, the same remap the window uses); workers whose
+        global id the caller didn't supply are marked ``-1`` — never
+        silently renumbered, so the per-job checkpoint group's
+        restore-by-global-id protocol stays sound."""
+        if members is not None:
+            members = np.asarray(members, int)
+            if members.shape != (n_new,):
+                raise ValueError(f"members must be ({n_new},), got "
+                                 f"{members.shape}")
+            return members
+        if col_map is None:
+            col_map = np.concatenate([
+                np.arange(min(old.size, n_new)),
+                np.full(max(0, n_new - old.size), -1, int)])
+        cm = np.asarray(col_map, int)
+        return np.where(cm >= 0, old[np.clip(cm, 0, old.size - 1)], -1)
+
+    def _maybe_refit(self, job: PSJob):
+        if (job.fresh < self.refit_fresh
+                or len(job.trace) < job.cap + self.refit_batch):
+            return
+        model = RuntimeModel(n_workers=job.width, lag=job.lag,
+                             z_dim=job.z_dim, hidden=job.hidden)
+        model.fit(np.stack(job.trace), steps=self.refit_steps,
+                  batch=self.refit_batch,
+                  seed=job.seed + job.resize_count)
+        job.model = model
+        job.mode = "dmm"
+        job.fallback = None
+        self._place(job, np.stack(job.trace[-job.cap:]))
+
+
+# ---------------------------------------------------------------------------
+# Controller-protocol facade.
+# ---------------------------------------------------------------------------
+
+
+class JobHandle:
+    """One job's controller-shaped view of the shared server.
+
+    Implements the full controller protocol (`predict_cutoff`, `observe`,
+    `resize`, `seed_window`, `window_array`, `predicted_order_stats`,
+    `_step`), so a ``launch.train.Trainer`` drives the multi-tenant
+    server without knowing it — including the checkpoint ``"ctl"`` group
+    and the elastic ``_sync_membership`` path.
+    """
+
+    def __init__(self, server: PSServer, job_id: str):
+        self.server = server
+        self.job_id = job_id
+
+    @property
+    def job(self) -> PSJob:
+        return self.server.registry[self.job_id]
+
+    @property
+    def n(self) -> int:
+        return self.job.width
+
+    @property
+    def warmed_up(self) -> bool:
+        return self.job.warmed_up
+
+    @property
+    def mode(self) -> str:
+        return self.job.mode
+
+    @property
+    def _step(self) -> int:
+        return self.job.step
+
+    @_step.setter
+    def _step(self, value: int):
+        self.job.step = int(value)
+
+    def predict_cutoff(self) -> int:
+        return self.server.predict_cutoff(self.job_id)
+
+    def observe(self, times, finished_mask=None):
+        return self.server.observe(self.job_id, times, finished_mask)
+
+    def resize(self, n_workers: int, col_map=None, model=None,
+               members=None):
+        return self.server.resize(self.job_id, n_workers, col_map=col_map,
+                                  model=model, members=members)
+
+    def seed_window(self, traces):
+        return self.server.seed_window(self.job_id, traces)
+
+    def window_array(self) -> np.ndarray:
+        return self.server.window_array(self.job_id)
+
+    def predicted_order_stats(self):
+        return self.server.predicted_order_stats(self.job_id)
+
+    def predicted_iter_time(self) -> Optional[float]:
+        return self.server.predicted_iter_time(self.job_id)

@@ -1,0 +1,74 @@
+"""BENCH_ps.json schema guard.
+
+Runs ``benchmarks.ps_bench.bench_ps`` at minimum size and asserts the
+machine-readable output keeps the ``bench_ps/v1`` contract.  Schema smoke
+test only — timings on a loaded CI box are noise; the committed
+BENCH_ps.json carries the acceptance number (batched beats looped at
+J=16, n=158).
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    from benchmarks.ps_bench import bench_ps
+
+    out = tmp_path_factory.mktemp("bench") / "BENCH_ps.json"
+    bench_ps(quick=True, out_path=str(out), n_list=(8,), j_list=(1, 2),
+             decision_iters=2, agg_jobs=2, agg_ticks=3, sched_ticks=3)
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_bench_ps_schema(bench_json):
+    assert bench_json["schema"] == "bench_ps/v1"
+    rows = bench_json["decision"]
+    assert {(r["n_workers"], r["n_jobs"]) for r in rows} == {(8, 1), (8, 2)}
+    for row in rows:
+        for key in ("n_workers", "n_jobs", "k_samples", "looped_us",
+                    "batched_us", "speedup"):
+            assert key in row, key
+        assert row["looped_us"] > 0 and row["batched_us"] > 0
+    agg = bench_json["aggregate"]
+    for key in ("arch", "n_jobs", "n_per_job", "ticks",
+                "multi_steps_per_s", "independent_steps_per_s",
+                "multi_over_independent"):
+        assert key in agg, key
+    assert agg["multi_steps_per_s"] > 0
+    assert agg["independent_steps_per_s"] > 0
+    sched = bench_json["sched"]
+    assert {r["policy"] for r in sched} == {"rr", "priority", "spsf"}
+    for row in sched:
+        for key in ("capacity", "total_steps", "steps_per_s",
+                    "service_spread", "serviced"):
+            assert key in row, key
+        assert row["total_steps"] == row["capacity"] * row["ticks"]
+        assert row["steps_per_s"] > 0
+    # round-robin is the starvation-free policy even at bench size
+    rr = next(r for r in sched if r["policy"] == "rr")
+    assert rr["service_spread"] <= 1
+
+
+def test_committed_bench_ps_matches_schema():
+    """The checked-in BENCH_ps.json (the perf trajectory's multi-tenant
+    datapoint) must exist, keep the schema, and show the batched vmapped
+    decision beating J looped dispatches at J=16, n=158 — the number the
+    subsystem exists for."""
+    path = Path(__file__).resolve().parent.parent / "BENCH_ps.json"
+    assert path.exists(), "BENCH_ps.json not committed"
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema"] == "bench_ps/v1"
+    combos = {(r["n_workers"], r["n_jobs"]) for r in data["decision"]}
+    for n in (8, 158):
+        for J in (1, 4, 16):
+            assert (n, J) in combos, (n, J)
+    flagship = next(r for r in data["decision"]
+                    if r["n_workers"] == 158 and r["n_jobs"] == 16)
+    assert flagship["speedup"] > 1.0, flagship

@@ -1,0 +1,150 @@
+"""Scheduler policy properties for the multi-tenant PS.
+
+Round-robin is starvation-free by construction: with J jobs at equal
+priority and per-tick capacity c, the per-job service counts over ANY
+window of J*k consecutive ticks differ by at most 1.  Priority ordering
+is a pure function of (priority, job_id) — invariant under permutation
+of job insertion order.  Shortest-predicted-step-first ranks by the
+DMM's posterior-predictive step time, cold jobs first.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import pytest
+
+from repro.ps.scheduler import (JobView, PriorityScheduler,
+                                RoundRobinScheduler, ShortestStepScheduler,
+                                make_scheduler)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _views(n, priorities=None, order=None):
+    order = order if order is not None else range(n)
+    return [JobView(job_id=f"j{i}",
+                    priority=(priorities[i] if priorities else 0.0),
+                    admit_order=o)
+            for i, o in zip(range(n), order)]
+
+
+# ---------------------------------------------------------------------------
+# Round-robin fairness.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(J=st.integers(2, 8), cap=st.integers(1, 8), k=st.integers(1, 4),
+       seed=st.integers(0, 100))
+def test_round_robin_no_starvation_over_any_window(J, cap, k, seed):
+    """Equal priorities: service counts over EVERY window of J*k ticks
+    differ by at most 1 per job."""
+    cap = min(cap, J)
+    views = _views(J)
+    sched = RoundRobinScheduler()
+    # a random warm-up offset makes the windows start mid-cycle
+    for _ in range(seed % (J + 1)):
+        sched.order(views, cap)
+    window = J * k
+    total = 3 * window
+    served = [sched.order(views, cap) for _ in range(total)]
+    for lo in range(total - window + 1):
+        counts = {v.job_id: 0 for v in views}
+        for tick in served[lo:lo + window]:
+            assert len(tick) == cap
+            for jid in tick:
+                counts[jid] += 1
+        assert max(counts.values()) - min(counts.values()) <= 1, (
+            lo, counts)
+
+
+@settings(**SETTINGS)
+@given(J=st.integers(2, 8), cap=st.integers(1, 8), k=st.integers(1, 3))
+def test_round_robin_exact_share_over_full_cycles(J, cap, k):
+    """Over exactly J*k ticks from a cycle boundary, every job is served
+    exactly cap*k times."""
+    cap = min(cap, J)
+    views = _views(J)
+    sched = RoundRobinScheduler()
+    counts = {v.job_id: 0 for v in views}
+    for _ in range(J * k):
+        for jid in sched.order(views, cap):
+            counts[jid] += 1
+    assert set(counts.values()) == {cap * k}
+
+
+def test_round_robin_no_duplicate_service_within_tick():
+    sched = RoundRobinScheduler()
+    for _ in range(7):
+        tick = sched.order(_views(5), 4)
+        assert len(tick) == len(set(tick))
+
+
+# ---------------------------------------------------------------------------
+# Priority: stable under insertion-order permutation.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(J=st.integers(2, 8), cap=st.integers(1, 8), seed=st.integers(0, 500))
+def test_priority_order_invariant_under_insertion_permutation(J, cap, seed):
+    rng = np.random.default_rng(seed)
+    # coarse priorities force ties, the case where a sloppy tie-break
+    # would leak admission order
+    prios = [float(p) for p in rng.integers(0, 3, size=J)]
+    views_a = _views(J, prios, order=range(J))
+    perm = rng.permutation(J)
+    views_b = [_views(J, prios, order=perm)[i] for i in rng.permutation(J)]
+    sched = PriorityScheduler()
+    assert (sched.order(views_a, min(cap, J))
+            == sched.order(views_b, min(cap, J)))
+
+
+def test_priority_serves_highest_first():
+    views = _views(4, priorities=[0.0, 2.0, 1.0, 2.0])
+    assert PriorityScheduler().order(views, 3) == ["j1", "j3", "j2"]
+
+
+# ---------------------------------------------------------------------------
+# Shortest-predicted-step-first.
+# ---------------------------------------------------------------------------
+
+
+def test_spsf_ranks_by_predicted_step_cold_jobs_first():
+    preds = {"j0": 2.0, "j1": 0.5, "j2": None, "j3": 1.0}
+    views = [JobView(job_id=j, priority=0.0, admit_order=i,
+                     predicted_iter=lambda j=j: preds[j])
+             for i, j in enumerate(sorted(preds))]
+    assert (ShortestStepScheduler().order(views)
+            == ["j2", "j1", "j3", "j0"])
+    assert ShortestStepScheduler().order(views, 2) == ["j2", "j1"]
+
+
+@settings(**SETTINGS)
+@given(J=st.integers(2, 6), cap=st.integers(1, 3), seed=st.integers(0, 100))
+def test_spsf_starvation_is_bounded(J, cap, seed):
+    """Predictions only refresh at service time, so without aging the
+    predicted-slowest warm job would be excluded forever.  With
+    max_starve, every job is serviced at least once per
+    (max_starve + J) ticks."""
+    cap = min(cap, J)
+    rng = np.random.default_rng(seed)
+    preds = {f"j{i}": float(p)
+             for i, p in enumerate(rng.uniform(0.5, 3.0, size=J))}
+    views = [JobView(job_id=j, priority=0.0, admit_order=i,
+                     predicted_iter=lambda j=j: preds[j])
+             for i, j in enumerate(sorted(preds))]
+    sched = ShortestStepScheduler(max_starve=4)
+    last_served = {v.job_id: -1 for v in views}
+    for tick in range(40):
+        for jid in sched.order(views, cap):
+            last_served[jid] = tick
+    horizon = 40 - (sched.max_starve + J)
+    assert all(t >= horizon for t in last_served.values()), last_served
+
+
+def test_make_scheduler_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        make_scheduler("fifo")
+    assert isinstance(make_scheduler("rr"), RoundRobinScheduler)
+    assert isinstance(make_scheduler("priority"), PriorityScheduler)
+    assert isinstance(make_scheduler("spsf"), ShortestStepScheduler)

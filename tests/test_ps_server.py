@@ -1,0 +1,313 @@
+"""Multi-tenant PSServer == looped single-job controllers.
+
+The tentpole contract of the batched decision path: batching amortizes
+dispatch, it NEVER changes the decision.  A PSServer with J=1 must
+produce the IDENTICAL cutoff sequence as a bare
+``CutoffController(backend="device")`` over a seeded paper_cluster_158
+run, and J>1 jobs must match J looped single-job controllers cutoff-
+for-cutoff with allclose windows.  Plus bit-level parity for the
+host-built key stacks the batched path feeds the vmapped threefry, and
+the registry/elasticity contracts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import paper_cluster_158
+from repro.core.controller import (CutoffController, _batched_impute_keys,
+                                   _impute_key, stacked_prng_keys)
+from repro.core.cutoff import order_stats
+from repro.core.runtime_model.api import RuntimeModel, stack_models
+from repro.ps import PSServer
+
+
+# ---------------------------------------------------------------------------
+# Key-stack bit parity (the host-built fast path must equal PRNGKey).
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_prng_keys_match_prngkey():
+    seeds = [0, 1, 7, 123456789, 2**31, 2**33 + 5]
+    stack = np.asarray(stacked_prng_keys(seeds))
+    for row, s in zip(stack, seeds):
+        np.testing.assert_array_equal(row, np.asarray(jax.random.PRNGKey(s)))
+
+
+def test_batched_impute_keys_match_single():
+    seeds, steps = [3, 9, 250], [5, 11, 40]
+    base = stacked_prng_keys([s + 1_000_003 for s in seeds])
+    got = np.asarray(_batched_impute_keys(
+        base, jnp.asarray(steps, jnp.uint32)))
+    want = np.stack([np.asarray(_impute_key(s, t))
+                     for s, t in zip(seeds, steps)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stack_models_rejects_mixed_shapes():
+    a = RuntimeModel(n_workers=8, lag=10).init(0)
+    b = RuntimeModel(n_workers=6, lag=10).init(0)
+    with pytest.raises(ValueError):
+        stack_models([a, b])
+    params, scales = stack_models([a, a])
+    assert scales.shape == (2,)
+    leaf = jax.tree.leaves(params)[0]
+    assert leaf.shape[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# Parity fixtures.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_16():
+    trace = paper_cluster_158(seed=0, n_workers=16).run(60)
+    rm = RuntimeModel(n_workers=16, lag=10).init(0)
+    rm.fit(trace, steps=60, batch=8, seed=0)
+    return rm, trace
+
+
+@pytest.fixture(scope="module")
+def fitted_158():
+    sim = paper_cluster_158(seed=0)
+    trace = sim.run(60)
+    rm = RuntimeModel(n_workers=158, lag=20).init(0)
+    rm.fit(trace, steps=60, batch=8, seed=0)
+    return rm, trace
+
+
+def _drive(controller, sim, steps, prefetch=None, flush=None):
+    """Standard predict/observe cycle; returns the cutoff sequence."""
+    seq = []
+    for _ in range(steps):
+        if prefetch is not None:
+            prefetch()
+        c = controller.predict_cutoff()
+        times = sim.step()
+        it = order_stats.iter_time(times, c)
+        controller.observe(times, times <= it + 1e-12)
+        if flush is not None:
+            flush()
+        seq.append(int(c))
+    return seq
+
+
+def test_psserver_j1_identical_cutoffs_158(fitted_158):
+    """Acceptance criterion: PSServer at J=1 is bit-exact on the cutoff
+    sequence vs a bare device controller over 100 paper-cluster steps."""
+    rm, trace = fitted_158
+    ref = CutoffController(rm, k_samples=32, seed=0, backend="device")
+    ref.seed_window(trace)
+    srv = PSServer()
+    h = srv.admit("job0", rm, window=trace, k_samples=32, seed=0)
+    np.testing.assert_allclose(h.window_array(), ref.window_array(),
+                               rtol=0, atol=0)
+
+    sim_a = paper_cluster_158(seed=7)
+    sim_b = paper_cluster_158(seed=7)
+    cutoffs_ref, censored = [], 0
+    for step in range(100):
+        c_ref = ref.predict_cutoff()
+        c_ps = h.predict_cutoff()
+        assert c_ref == c_ps, (step, c_ref, c_ps)
+        cutoffs_ref.append(c_ref)
+        times = sim_a.step()
+        times_b = sim_b.step()
+        np.testing.assert_array_equal(times, times_b)
+        it = order_stats.iter_time(times, c_ref)
+        mask = times <= it + 1e-12
+        censored += int(not mask.all())
+        ref.observe(times, mask)
+        h.observe(times_b, mask)
+        srv.flush()
+    # the run must exercise the fused imputation and a dynamic cutoff for
+    # the parity to mean anything
+    assert censored >= 50
+    assert len(set(cutoffs_ref)) > 1
+    # windows agree to f32/vmap reassociation noise
+    np.testing.assert_allclose(h.window_array(), ref.window_array(),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_psserver_j3_matches_looped_controllers(fitted_16):
+    """J jobs through one batched dispatch == J looped single-job
+    controllers, cutoff-for-cutoff, with allclose windows — and the
+    server actually batches (dispatch count ~1/tick, not J/tick)."""
+    rm, _ = fitted_16
+    J, steps = 3, 50
+    srv = PSServer()
+    refs, handles = [], []
+    for j in range(J):
+        tr = paper_cluster_158(seed=100 + j, n_workers=16).run(40)
+        ref = CutoffController(rm, k_samples=16, seed=7 * j,
+                               backend="device")
+        ref.seed_window(tr)
+        refs.append(ref)
+        handles.append(srv.admit(f"job{j}", rm, window=tr, k_samples=16,
+                                 seed=7 * j))
+    sims_a = [paper_cluster_158(seed=200 + j, n_workers=16)
+              for j in range(J)]
+    sims_b = [paper_cluster_158(seed=200 + j, n_workers=16)
+              for j in range(J)]
+    d0 = srv.dispatches
+    for step in range(steps):
+        srv.prefetch()
+        for j in range(J):
+            c_ref = refs[j].predict_cutoff()
+            c_ps = handles[j].predict_cutoff()
+            assert c_ref == c_ps, (step, j, c_ref, c_ps)
+            t = sims_a[j].step()
+            it = order_stats.iter_time(t, c_ref)
+            mask = t <= it + 1e-12
+            refs[j].observe(t, mask)
+            handles[j].observe(sims_b[j].step(), mask)
+        srv.flush()
+    for j in range(J):
+        np.testing.assert_allclose(handles[j].window_array(),
+                                   refs[j].window_array(),
+                                   rtol=1e-4, atol=1e-4)
+    # one batched dispatch per tick in steady state (plus the warm-up
+    # prefetch and occasional plain/censored mode splits), not J per tick
+    assert srv.dispatches - d0 <= steps + 5, (srv.dispatches - d0, steps)
+
+
+def test_psserver_deterministic(fitted_16):
+    rm, trace = fitted_16
+    runs = []
+    for _ in range(2):
+        srv = PSServer()
+        h = srv.admit("a", rm, window=trace, k_samples=16, seed=3)
+        runs.append(_drive(h, paper_cluster_158(seed=11, n_workers=16), 20,
+                           prefetch=srv.prefetch, flush=srv.flush))
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# Registry / elasticity / checkpoint contracts.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_admission_contracts(fitted_16):
+    rm, trace = fitted_16
+    srv = PSServer()
+    srv.admit("a", rm, window=trace, seed=0)
+    with pytest.raises(ValueError):
+        srv.admit("a", rm)                       # duplicate id
+    with pytest.raises(ValueError):
+        srv.admit("b", rm, members=np.arange(4))  # wrong membership width
+    with pytest.raises(ValueError):
+        srv.admit("c", RuntimeModel(n_workers=16, lag=10))  # unfitted
+    assert srv.registry.ids() == ["a"]
+    out = srv.evict("a")
+    assert out["window"].shape[1] == 16
+    assert "a" not in srv.registry
+
+
+def test_mixed_architectures_bucket_separately():
+    """Two same-width jobs with different DMM architectures cannot share
+    a param stack — the bucket signature must split them, not crash the
+    shared dispatch."""
+    trace = paper_cluster_158(seed=0, n_workers=8).run(20)
+    a = RuntimeModel(n_workers=8, lag=5, z_dim=8).init(0)
+    b = RuntimeModel(n_workers=8, lag=5, z_dim=16).init(0)
+    for rm in (a, b):
+        rm.norm_scale = float(2.0 * trace[:6].mean())
+    srv = PSServer()
+    ha = srv.admit("a", a, window=trace, k_samples=8, seed=0)
+    hb = srv.admit("b", b, window=trace, k_samples=8, seed=1)
+    assert (srv.registry["a"].bucket_sig != srv.registry["b"].bucket_sig)
+    for h in (ha, hb):
+        c = h.predict_cutoff()
+        assert 1 <= c <= 8
+        times = paper_cluster_158(seed=3, n_workers=8).step()
+        h.observe(times, times <= np.sort(times)[c - 1] + 1e-12)
+    assert srv.flush() == 2          # one dispatch per architecture
+
+
+def test_observe_width_is_strict(fitted_16):
+    rm, trace = fitted_16
+    srv = PSServer()
+    h = srv.admit("a", rm, window=trace, seed=0)
+    h.predict_cutoff()
+    with pytest.raises(ValueError):
+        h.observe(np.ones(12))
+
+
+def test_resize_without_model_degrades_then_refits(fitted_16):
+    rm, trace = fitted_16
+    srv = PSServer(refit_steps=30, refit_fresh=3)
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    win_before = h.window_array()
+    h.resize(12, col_map=np.arange(12))
+    assert h.mode == "fallback" and h.n == 12
+    # survivors carried over column-exactly into the remapped trace
+    np.testing.assert_allclose(h.window_array()[-win_before.shape[0]:],
+                               win_before[:, :12], rtol=1e-6, atol=1e-6)
+    seq = _drive(h, paper_cluster_158(seed=6, n_workers=12), 25,
+                 flush=srv.flush)
+    assert all(1 <= c <= 12 for c in seq)
+    assert h.mode == "dmm", "refit should have rejoined the batched path"
+    assert h.job.model.n_workers == 12
+
+
+def test_resize_same_width_is_a_noop(fitted_16):
+    """Re-asserting the current width (a reconciliation loop's idempotent
+    call) must not degrade a healthy DMM job — the ElasticController
+    no-op guard, mirrored."""
+    rm, trace = fitted_16
+    srv = PSServer()
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0,
+                  members=np.arange(30, 46))
+    h.resize(16)
+    assert h.mode == "dmm"
+    assert h.job.model is rm
+    np.testing.assert_array_equal(h.job.members, np.arange(30, 46))
+
+
+def test_resize_with_model_stays_on_dmm_path(fitted_16):
+    rm, trace = fitted_16
+    rm12 = RuntimeModel(n_workers=12, lag=10).init(1)
+    rm12.norm_scale = rm.norm_scale
+    srv = PSServer()
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    h.resize(12, col_map=np.arange(12), model=rm12)
+    assert h.mode == "dmm" and h.n == 12
+    with pytest.raises(ValueError):
+        h.resize(10, model=rm12)                 # wrong-width model
+    seq = _drive(h, paper_cluster_158(seed=6, n_workers=12), 5,
+                 flush=srv.flush)
+    assert all(1 <= c <= 12 for c in seq)
+
+
+def test_checkpoint_group_roundtrip(fitted_16):
+    rm, trace = fitted_16
+    srv = PSServer()
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0,
+                  members=np.arange(30, 46))
+    _drive(h, paper_cluster_158(seed=5, n_workers=16), 4, flush=srv.flush)
+    grp = srv.checkpoint_groups()["ps/a"]
+    assert int(grp["n"]) == 16 and int(grp["step"]) == 4
+    np.testing.assert_array_equal(grp["members"], np.arange(30, 46))
+    # restore into a fresh server: window warm, step continues
+    srv2 = PSServer()
+    h2 = srv2.admit("a", rm, k_samples=16, seed=0)
+    h2.seed_window(grp["window"])
+    h2._step = int(grp["step"])
+    np.testing.assert_allclose(h2.window_array(), h.window_array(),
+                               rtol=1e-6, atol=1e-6)
+    # both servers produce the same next decision from the same state
+    assert h2.predict_cutoff() == h.predict_cutoff()
+
+
+def test_predicted_iter_time_matches_samples(fitted_16):
+    """The scheduler's ranking key must equal E[x_(c)] of the decision's
+    own sample cloud."""
+    rm, trace = fitted_16
+    srv = PSServer()
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    c = h.predict_cutoff()
+    t = h.predicted_iter_time()
+    samples = np.asarray(h.job.pending_pred[2][h.job.pending_pred[3]])
+    want = float(np.sort(samples, axis=1)[:, c - 1].mean())
+    np.testing.assert_allclose(t, want, rtol=1e-5)
