@@ -1,25 +1,40 @@
 """Multi-tenant PS benchmark: batched vs looped decisions + schedulers.
 
-Three sections, emitted as CSV rows AND into a machine-readable
-``BENCH_ps.json`` (schema ``bench_ps/v1``) — the perf trajectory's fourth
+Six sections, emitted as CSV rows AND into a machine-readable
+``BENCH_ps.json`` (schema ``bench_ps/v2``) — the perf trajectory's fourth
 datapoint after agg/controller/elastic:
 
   * ``decision`` — per-tick decision latency for J concurrent jobs:
     J looped single-job ``CutoffController(backend="device")`` fused
-    dispatches vs ONE ``PSServer`` vmapped batched dispatch, over
-    J x n_workers.  This is the number the subsystem exists for: at
-    J=16, n=158 the batched path must win (dispatch overhead paid once).
+    dispatches vs ONE ``PSServer`` vmapped batched dispatch, swept over
+    J in {1, 4, 16, 64, 256} x n_workers.  This is the number the
+    subsystem exists for: dispatch overhead paid once per tick, so the
+    batched path must not lose anywhere and must win from J=4 up
+    (scripts/ci.sh --bench gates on it).
+  * ``ragged`` — a MIXED-width job set (the pad-to-bucket tentpole):
+    jobs at different worker widths share one padded bucket, so the
+    whole mix still costs exactly one dispatch per tick
+    (``dispatches_per_tick == 1.0`` is asserted into the row).
   * ``aggregate`` — end-to-end multi-job Trainer throughput: J tiny
     training jobs through one PSServer vs J independent Trainers each
     with its own device controller (the "J independent servers"
     baseline).
+  * ``refit`` — tick latency WHILE an async ELBO refit is running on a
+    worker thread: the tick path must not block on ``model.fit``
+    (``nonblocking`` is measured with the fit gated open only after the
+    timed ticks complete).
   * ``sched`` — under capacity pressure (C < J serviced per tick), the
     throughput/service spread of the round-robin, priority and
     shortest-predicted-step-first policies.
+  * ``sched_churn`` — adversarial admit/evict/resize churn around three
+    long-lived mixed-width jobs while round-robin serves under capacity
+    pressure: throughput plus the long-lived jobs' service spread (the
+    cursor-invalidation regression, measured instead of unit-tested).
 """
 from __future__ import annotations
 
 import json
+import threading
 import time
 
 import numpy as np
@@ -28,7 +43,10 @@ from benchmarks.common import emit
 
 
 DECISION_NS = (8, 158)
-DECISION_JS = (1, 4, 16)
+DECISION_JS = (1, 4, 16, 64, 256)
+QUICK_JS = (1, 4, 16)
+RAGGED_WIDTHS = (158, 96, 32, 8)
+QUICK_RAGGED_WIDTHS = (16, 10, 6)
 
 
 def _model_for(n: int, trace, lag: int = 20):
@@ -91,20 +109,23 @@ def _decision_bench(n_list, j_list, iters: int, k_samples: int = 64,
             for _ in range(3):
                 _looped_tick(ctls, sims(900))
                 _batched_tick(server, handles, sims(900))
+            # large-J loops are dominated by the looped baseline's J
+            # dispatches; fewer timed iters keep the sweep bounded
+            it_j = iters if J <= 16 else max(2, iters // 4)
             best = {"looped": float("inf"), "batched": float("inf")}
             for _ in range(blocks):
                 s_l, s_b = sims(500), sims(500)
                 t0 = time.perf_counter()
-                for _ in range(iters):
+                for _ in range(it_j):
                     _looped_tick(ctls, s_l)
                 best["looped"] = min(best["looped"],
-                                     (time.perf_counter() - t0) / iters * 1e6)
+                                     (time.perf_counter() - t0) / it_j * 1e6)
                 t0 = time.perf_counter()
-                for _ in range(iters):
+                for _ in range(it_j):
                     _batched_tick(server, handles, s_b)
                 best["batched"] = min(
                     best["batched"],
-                    (time.perf_counter() - t0) / iters * 1e6)
+                    (time.perf_counter() - t0) / it_j * 1e6)
             entry = {"n_workers": n, "n_jobs": J, "k_samples": k_samples,
                      "looped_us": best["looped"],
                      "batched_us": best["batched"],
@@ -117,6 +138,218 @@ def _decision_bench(n_list, j_list, iters: int, k_samples: int = 64,
                  f"{entry['speedup']:.2f}x")
             rows.append(entry)
     return rows
+
+
+def _ragged_bench(iters: int, widths=RAGGED_WIDTHS, k_samples: int = 32,
+                  blocks: int = 3):
+    """Mixed-width job set through ONE padded bucket vs looped per-width
+    controllers — the pad-to-bucket tentpole's latency and its
+    one-dispatch-per-tick contract."""
+    from repro.cluster.simulator import paper_cluster_158
+    from repro.core.controller import CutoffController
+    from repro.ps import PSServer
+
+    ctls, handles = [], []
+    server = PSServer()
+    for j, w in enumerate(widths):
+        trace = paper_cluster_158(seed=w, n_workers=w).run(25)
+        rm = _model_for(w, trace)
+        ctl = CutoffController(rm, k_samples=k_samples, seed=j,
+                               backend="device")
+        ctl.seed_window(trace)
+        ctls.append(ctl)
+        handles.append(server.admit(f"job{j}", rm, window=trace,
+                                    k_samples=k_samples, seed=j))
+    sigs = {server.registry[f"job{j}"].bucket_sig
+            for j in range(len(widths))}
+    assert len(sigs) == 1, "mixed widths must share one bucket"
+
+    def sims(s):
+        return [paper_cluster_158(seed=s + j, n_workers=w)
+                for j, w in enumerate(widths)]
+
+    for _ in range(3):
+        _looped_tick(ctls, sims(900))
+        _batched_tick(server, handles, sims(900))
+    d0, t0c = server.dispatches, server.ticks
+    best = {"looped": float("inf"), "batched": float("inf")}
+    for _ in range(blocks):
+        s_l, s_b = sims(500), sims(500)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            _looped_tick(ctls, s_l)
+        best["looped"] = min(best["looped"],
+                             (time.perf_counter() - t0) / iters * 1e6)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            _batched_tick(server, handles, s_b)
+        best["batched"] = min(best["batched"],
+                              (time.perf_counter() - t0) / iters * 1e6)
+    dpt = ((server.dispatches - d0)
+           / max(1, server.ticks - t0c))
+    row = {"widths": list(widths), "n_pad": int(max(widths)),
+           "n_jobs": len(widths), "k_samples": k_samples,
+           "looped_us": best["looped"], "batched_us": best["batched"],
+           "speedup": best["looped"] / best["batched"],
+           "dispatches_per_tick": dpt}
+    emit("ps/ragged_looped_us", best["looped"],
+         f"widths={'x'.join(map(str, widths))}")
+    emit("ps/ragged_batched_us", best["batched"],
+         f"widths={'x'.join(map(str, widths))}")
+    emit("ps/ragged_speedup", 0.0,
+         f"{row['speedup']:.2f}x;dpt={dpt:.2f}")
+    return row
+
+
+def _refit_bench(ticks: int = 12):
+    """Tick latency during an ACTIVE async refit.  The fit thread is
+    gated shut for the whole timed window, so any blocking would show up
+    as a tick stall; the gate opens afterwards and the real ELBO fit
+    wall-clock is recorded for scale."""
+    from repro.cluster.simulator import paper_cluster_158
+    from repro.core.cutoff import order_stats
+    from repro.ps import PSServer
+
+    n = 16
+    trace = paper_cluster_158(seed=0, n_workers=n).run(30)
+    rm = _model_for(n, trace, lag=10)
+    srv = PSServer(refit_steps=60, refit_batch=8, refit_fresh=2,
+                   refit_async=True)
+    ha = srv.admit("a", rm, window=trace[-11:], k_samples=32, seed=0)
+    hb = srv.admit("b", rm, window=trace[-11:], k_samples=32, seed=1)
+    gate = threading.Event()
+    fit_wall = {}
+    real_fit = srv._fit_model
+
+    def gated_fit(job, rows, nw, seed):
+        gate.wait(timeout=120)
+        t0 = time.perf_counter()
+        out = real_fit(job, rows, nw, seed)
+        fit_wall["s"] = time.perf_counter() - t0
+        return out
+
+    srv._fit_model = gated_fit
+    hb.resize(12, col_map=np.arange(12))
+    sims = {"a": paper_cluster_158(seed=5, n_workers=16),
+            "b": paper_cluster_158(seed=6, n_workers=12)}
+
+    def tick():
+        for h, s in ((ha, sims["a"]), (hb, sims["b"])):
+            times = s.step()
+            c = h.predict_cutoff()
+            it = order_stats.iter_time(times, c)
+            h.observe(times, times <= it + 1e-12)
+        srv.flush()
+
+    # warm compile AND grow b's trace past the refit-trigger floor so the
+    # gated refit is already in flight when the timed window starts
+    for _ in range(10):
+        tick()
+    lat = []
+    for _ in range(ticks):
+        t0 = time.perf_counter()
+        tick()
+        lat.append(time.perf_counter() - t0)
+    task = srv.registry["b"].refit_task
+    nonblocking = task is not None and task[0].is_alive()
+    gate.set()
+    srv.wait_refits()
+    row = {"ticks_during_refit": ticks,
+           "tick_p50_us": float(np.median(lat) * 1e6),
+           "tick_max_us": float(np.max(lat) * 1e6),
+           "fit_wall_s": float(fit_wall.get("s", 0.0)),
+           "nonblocking": bool(nonblocking),
+           "rejoined": bool(hb.mode == "dmm")}
+    emit("ps/refit_tick_p50_us", row["tick_p50_us"],
+         f"nonblocking={row['nonblocking']};rejoined={row['rejoined']}")
+    emit("ps/refit_fit_wall_s", row["fit_wall_s"] * 1e6, "gated ELBO fit")
+    return row
+
+
+def _sched_churn_bench(ticks: int, capacity: int = 3, seed: int = 0):
+    """Adversarial churn: admit/evict transient jobs and resize the
+    long-lived ones while round-robin serves under capacity pressure —
+    bucket repacks, fallback degradations and async refits all ride the
+    tick loop.  The long-lived jobs' service spread is the measured form
+    of the cursor-invalidation regression."""
+    from repro.cluster.simulator import paper_cluster_158
+    from repro.core.cutoff import order_stats
+    from repro.ps import PSServer, RoundRobinScheduler
+    from repro.ps.scheduler import job_views
+
+    widths = (16, 10, 6)
+    traces = {w: paper_cluster_158(seed=w, n_workers=w).run(25)
+              for w in widths}
+    models = {w: _model_for(w, traces[w], lag=10) for w in widths}
+    srv = PSServer(refit_steps=30, refit_fresh=4, refit_async=True)
+    rng = np.random.default_rng(seed)
+    sims, counts, base_w = {}, {}, {}
+    state = {"next": 0}
+
+    def admit_one(w):
+        jid = f"job{state['next']}"
+        state["next"] += 1
+        srv.admit(jid, models[w], window=traces[w], k_samples=16,
+                  seed=state["next"])
+        sims[jid] = paper_cluster_158(seed=1000 + state["next"],
+                                      n_workers=w)
+        counts[jid] = 0
+        base_w[jid] = w
+        return jid
+
+    core = [admit_one(w) for w in widths]     # long-lived
+    extras = []
+    sched = RoundRobinScheduler()
+    events = {"admit": 0, "evict": 0, "resize": 0}
+    # warm the dispatch shapes before timing
+    for jid in core:
+        h = srv.handle(jid)
+        t = sims[jid].step()
+        c = h.predict_cutoff()
+        h.observe(t, t <= order_stats.iter_time(t, c) + 1e-12)
+    srv.flush()
+    t_start = time.perf_counter()
+    for tick in range(ticks):
+        ev = rng.integers(0, 5)
+        if ev == 0 and len(extras) < 4:
+            extras.append(admit_one(int(rng.choice(widths))))
+            events["admit"] += 1
+        elif ev == 1 and extras:
+            jid = extras.pop(int(rng.integers(len(extras))))
+            srv.evict(jid)
+            sims.pop(jid)
+            events["evict"] += 1
+        elif ev == 2:
+            jid = core[int(rng.integers(len(core)))]
+            h = srv.handle(jid)
+            w_new = (h.n - 2) if h.n == base_w[jid] else base_w[jid]
+            h.resize(w_new)
+            sims[jid] = paper_cluster_158(seed=2000 + tick,
+                                          n_workers=w_new)
+            events["resize"] += 1
+        order = sched.order(job_views(srv), capacity)
+        srv.prefetch(order)
+        for jid in order:
+            h = srv.handle(jid)
+            t = sims[jid].step()
+            c = h.predict_cutoff()
+            h.observe(t, t <= order_stats.iter_time(t, c) + 1e-12)
+            counts[jid] += 1
+        srv.flush()
+    wall = time.perf_counter() - t_start
+    srv.wait_refits(core)
+    core_counts = [counts[j] for j in core]
+    total = sum(counts.values())
+    row = {"ticks": ticks, "capacity": capacity, "events": events,
+           "total_steps": total, "steps_per_s": total / wall,
+           "core_service_spread": max(core_counts) - min(core_counts),
+           "core_modes": {j: srv.handle(j).mode for j in core}}
+    emit("ps/sched_churn_steps_per_s", wall / max(total, 1) * 1e6,
+         f"{row['steps_per_s']:.2f} steps/s;"
+         f"spread={row['core_service_spread']};"
+         f"admit={events['admit']};evict={events['evict']};"
+         f"resize={events['resize']}")
+    return row
 
 
 def _aggregate_bench(n_jobs: int, ticks: int, blocks: int = 2):
@@ -238,21 +471,32 @@ def _sched_bench(n_jobs: int, ticks: int, capacity: int):
 
 
 def bench_ps(quick: bool = False, out_path: str = "BENCH_ps.json",
-             n_list=DECISION_NS, j_list=DECISION_JS,
+             n_list=DECISION_NS, j_list=None,
              decision_iters: int = None, agg_jobs: int = None,
-             agg_ticks: int = None, sched_ticks: int = None):
+             agg_ticks: int = None, sched_ticks: int = None,
+             ragged_widths=None, churn_ticks: int = None):
     iters = decision_iters if decision_iters is not None else (
         4 if quick else 10)
+    js = j_list if j_list is not None else (
+        QUICK_JS if quick else DECISION_JS)
+    widths = ragged_widths if ragged_widths is not None else (
+        QUICK_RAGGED_WIDTHS if quick else RAGGED_WIDTHS)
     a_jobs = agg_jobs if agg_jobs is not None else (3 if quick else 4)
     a_ticks = agg_ticks if agg_ticks is not None else (8 if quick else 20)
     s_ticks = sched_ticks if sched_ticks is not None else (
         8 if quick else 24)
+    c_ticks = churn_ticks if churn_ticks is not None else (
+        12 if quick else 60)
     results = {
-        "schema": "bench_ps/v1",
+        "schema": "bench_ps/v2",
         "quick": quick,
-        "decision": _decision_bench(n_list, j_list, iters),
+        "decision": _decision_bench(n_list, js, iters),
+        "ragged": _ragged_bench(iters, widths=widths),
         "aggregate": _aggregate_bench(a_jobs, a_ticks),
+        "refit": _refit_bench(ticks=4 if quick else 12),
         "sched": _sched_bench(a_jobs, s_ticks, capacity=max(1, a_jobs - 1)),
+        "sched_churn": _sched_churn_bench(c_ticks,
+                                          capacity=max(1, a_jobs - 1)),
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -20,6 +20,18 @@ if [[ "${1:-}" == "--bench" ]]; then
     python -m benchmarks.run --quick --only controller "$@"
     python -m benchmarks.run --quick --only elastic "$@"
     python -m benchmarks.run --quick --only ps "$@"
+    # gate: batched dispatch must not LOSE to J looped dispatches once
+    # there is real batching to amortize (J >= 4) — a regression here is
+    # the multi-tenant subsystem failing at its one job
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_ps.json"))["decision"]
+bad = [r for r in rows if r["n_jobs"] >= 4 and r["speedup"] < 1.0]
+for r in bad:
+    print(f"ps decision REGRESSION: n={r['n_workers']} J={r['n_jobs']} "
+          f"speedup={r['speedup']:.3f}x (< 1.0)", file=sys.stderr)
+sys.exit(1 if bad else 0)
+EOF
     exit 0
 fi
 

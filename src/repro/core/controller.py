@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cutoff import censoring, elfving, order_stats
-from repro.core.runtime_model.api import RuntimeModel
+from repro.core.runtime_model.api import (RuntimeModel, colwise_uniform)
 
 
 class FullSyncController:
@@ -141,7 +141,12 @@ class ElfvingController(FullSyncController):
         t = np.asarray(times, np.float64)
         if finished_mask is not None:
             m = np.asarray(finished_mask, bool)
-            if m.any() and not m.all():
+            if not m.any():
+                raise ValueError(
+                    "observe got an all-False finished_mask: a step with "
+                    "zero finished workers has no observed cutoff time to "
+                    "impute the censored entries at")
+            if not m.all():
                 # keeping only finished workers' times would give the
                 # running (mu, sigma) survivorship bias once cutoffs
                 # engage (the sample never contains a slow tail), drifting
@@ -207,11 +212,28 @@ def _append_core(ring, head, obs, mode: str):
     times, mask = obs["times"], obs["mask"]
     cutoff_time = jnp.max(jnp.where(mask, times, -jnp.inf))
     if mode == "censored":
-        u = jax.random.uniform(obs["key"], times.shape)
+        u = colwise_uniform(obs["key"], times.shape[0])
         row = censoring.impute_censored_jax(times, mask, obs["mu"],
                                             obs["std"], cutoff_time, u)
     else:
         row = jnp.where(mask, times, cutoff_time)
+    return ring.at[head].set(row), (head + 1) % ring.shape[0]
+
+
+def _ragged_append_core(ring, head, obs):
+    """Ragged twin of :func:`_append_core` with the imputation mode
+    TRACED: ``obs["cen"]`` (a per-job bool scalar) selects the censored or
+    plain row in-jit, so a mixed plain/censored job set still shares one
+    vmapped dispatch.  Both rows are computed — cheap elementwise work —
+    and padded columns (mask False, garbage moments) land finite values
+    that the decision's column mask never reads."""
+    times, mask = obs["times"], obs["mask"]
+    cutoff_time = jnp.max(jnp.where(mask, times, -jnp.inf))
+    u = colwise_uniform(obs["key"], times.shape[0])
+    crow = censoring.impute_censored_jax(times, mask, obs["mu"],
+                                         obs["std"], cutoff_time, u)
+    prow = jnp.where(mask, times, cutoff_time)
+    row = jnp.where(obs["cen"], crow, prow)
     return ring.at[head].set(row), (head + 1) % ring.shape[0]
 
 
@@ -246,37 +268,59 @@ def _fused_observe_decide(params, ring, head, obs, key, norm_scale, *,
                                 mode, k_samples, lo)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "k_samples", "lo"))
-def _batched_observe_decide(params, rings, heads, obs, keys, norm_scales, *,
-                            mode: str, k_samples: int, lo: int):
+def _ragged_observe_decide_core(params, ring, head, obs, key, norm_scale,
+                                width, lo, k_samples: int):
+    """One whole RAGGED controller iteration: traced-mode append
+    (:func:`_ragged_append_core`), then the traced-width decision
+    (``RuntimeModel._decide_core(width=...)``)."""
+    ring, head = _ragged_append_core(ring, head, obs)
+    (cutoff, samples, pred_mu, pred_std,
+     pred_iter) = RuntimeModel._decide_core(
+        params, ring, head, key, norm_scale, k_samples, lo, width=width)
+    return ring, head, cutoff, samples, pred_mu, pred_std, pred_iter
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def _batched_observe_decide_ragged(params, rings, heads, obs, keys,
+                                   norm_scales, widths, los, *,
+                                   k_samples: int):
     """ONE jit call for J whole controller iterations (the multi-tenant
-    parameter server's tick): every operand carries a leading (J,) job
-    axis — stacked params, the (J, lag+1, n) ring stack, per-job heads,
-    observation rows/masks/moments, per-job PRNG keys and norm scales.
-    Dispatch cost is paid once instead of J times; the per-job cutoffs
-    come back as one (J,) int32 vector fetched lazily per job."""
-    def one(p, r, h, o, k, s):
-        return _observe_decide_core(p, r, h, o, k, s, mode, k_samples, lo)
+    parameter server's tick), jobs of MIXED widths included: every
+    operand carries a leading (J,) job axis — zero-padded stacked params
+    (``stack_models_padded``), the (J, lag+1, n_pad) ring stack, per-job
+    heads, packed observation rows/masks/moments, per-job PRNG keys,
+    norm scales, TRACED widths and argmax floors, and per-job traced
+    censor flags inside ``obs``.  The only static is ``k_samples``, so
+    one compiled program serves every job mix of a bucket and dispatch
+    cost is paid once per tick instead of once per job (or per width
+    group).  Per-job cutoffs come back as one (J,) int32 vector."""
+    def one(p, r, h, o, k, s, w, lo):
+        return _ragged_observe_decide_core(p, r, h, o, k, s, w, lo,
+                                           k_samples)
 
-    return jax.vmap(one)(params, rings, heads, obs, keys, norm_scales)
+    return jax.vmap(one)(params, rings, heads, obs, keys, norm_scales,
+                         widths, los)
 
 
-@functools.partial(jax.jit, static_argnames=("k_samples", "lo"))
-def _batched_decide(params, rings, heads, keys, norm_scales, *,
-                    k_samples: int, lo: int):
-    """Decide-only twin of :func:`_batched_observe_decide` (mode="none"):
-    used to prefetch the first post-seeding decision for a batch of jobs
-    in one dispatch."""
-    def one(p, r, h, k, s):
-        return _observe_decide_core(p, r, h, None, k, s, "none", k_samples,
-                                    lo)
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def _batched_decide_ragged(params, rings, heads, keys, norm_scales,
+                           widths, los, *, k_samples: int):
+    """Decide-only twin of :func:`_batched_observe_decide_ragged`: used
+    to prefetch the first post-seeding decision for a batch of jobs in
+    one dispatch."""
+    def one(p, r, h, k, s, w, lo):
+        return RuntimeModel._decide_core(p, r, h, k, s, k_samples, lo,
+                                         width=w)
 
-    return jax.vmap(one)(params, rings, heads, keys, norm_scales)
+    return jax.vmap(one)(params, rings, heads, keys, norm_scales, widths,
+                         los)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
 def _impute_uniforms(key, n: int):
-    return jax.random.uniform(key, (n,))
+    # column-wise so the numpy reference backend draws the SAME uniforms
+    # the device append path does at any padded width (api.colwise_uniform)
+    return colwise_uniform(key, n)
 
 
 def _impute_key(seed: int, step: int):
@@ -287,14 +331,13 @@ def _impute_key(seed: int, step: int):
     return jax.random.fold_in(jax.random.PRNGKey(seed + 1_000_003), step)
 
 
-def stacked_prng_keys(seeds) -> jax.Array:
-    """(J, 2) uint32 key stack, row j bit-identical to
+def _prng_key_rows(seeds) -> np.ndarray:
+    """(J, 2) uint32 HOST array, row j bit-identical to
     ``jax.random.PRNGKey(seeds[j])`` under the default threefry impl.
 
-    Built host-side in one shot so a J-job tick costs ONE upload instead
-    of J ``PRNGKey`` dispatches (the dispatch overhead the batched
-    decision exists to amortize).  ``tests/test_ps_server.py`` pins the
-    bit-level equivalence."""
+    The numpy core of :func:`stacked_prng_keys`, kept host-side so the
+    server's flush can splice decide and impute keys into one packed
+    upload without touching the device."""
     seeds = np.asarray(list(seeds), np.uint64)
     out = np.empty((seeds.shape[0], 2), np.uint32)
     # with x64 disabled (this repo's default) PRNGKey truncates the seed
@@ -304,7 +347,18 @@ def stacked_prng_keys(seeds) -> jax.Array:
     else:
         out[:, 0] = 0
     out[:, 1] = (seeds & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    return jnp.asarray(out)
+    return out
+
+
+def stacked_prng_keys(seeds) -> jax.Array:
+    """(J, 2) uint32 key stack, row j bit-identical to
+    ``jax.random.PRNGKey(seeds[j])`` under the default threefry impl.
+
+    Built host-side in one shot so a J-job tick costs ONE upload instead
+    of J ``PRNGKey`` dispatches (the dispatch overhead the batched
+    decision exists to amortize).  ``tests/test_ps_server.py`` pins the
+    bit-level equivalence."""
+    return jnp.asarray(_prng_key_rows(seeds))
 
 
 @jax.jit
@@ -390,7 +444,13 @@ class CutoffController:
         return w[-self._count:] if self._count < self._cap else w
 
     def seed_window(self, traces: np.ndarray):
-        """Warm-start the lag window from recorded traces."""
+        """Warm-start the lag window from recorded traces.
+
+        Device backend: built host-side and uploaded in ONE transfer —
+        bit-identical to ``_ring_append`` with ``mode="plain"`` and a
+        full mask (which writes the f32 rows verbatim), without paying
+        up to lag+1 tiny dispatches per seeded controller (the cost that
+        dominates large-J benchmark setup)."""
         rows = np.asarray(traces)[-self._cap:]
         if self.backend == "numpy":
             for row in rows:
@@ -398,12 +458,17 @@ class CutoffController:
             return
         self._ensure_ring()
         self._pending_decision = None
-        full = jnp.ones((self.n,), bool)
-        for row in rows:
-            obs = {"times": jnp.asarray(row, jnp.float32), "mask": full}
-            self._ring, self._head = _ring_append(self._ring, self._head,
-                                                  obs, mode="plain")
-            self._count = min(self._count + 1, self._cap)
+        merged = np.asarray(rows, np.float32)
+        if self._count:
+            merged = np.concatenate(
+                [np.asarray(self.window_array(), np.float32), merged])
+        merged = merged[-self._cap:]
+        m = merged.shape[0]
+        ring = np.zeros((self._cap, self.n), np.float32)
+        ring[:m] = merged
+        self._ring = jnp.asarray(ring)
+        self._head = jnp.asarray(m % self._cap, jnp.int32)
+        self._count = min(self._count + rows.shape[0], self._cap)
 
     def resize(self, n_workers: int, col_map=None,
                model: Optional[RuntimeModel] = None, members=None):
@@ -530,6 +595,14 @@ class CutoffController:
 
     # -- observation ----------------------------------------------------
     def observe(self, times, finished_mask=None):
+        if finished_mask is not None and not bool(np.any(finished_mask)):
+            # no coherent cutoff time exists: the device path would
+            # silently impute at max(where(False, ..)) = -inf and poison
+            # the ring — reject loudly on both backends instead
+            raise ValueError(
+                "observe got an all-False finished_mask: a step with zero "
+                "finished workers has no observed cutoff time to impute "
+                "the censored entries at")
         if self.backend == "numpy":
             return self._observe_numpy(times, finished_mask)
         self._ensure_ring()
@@ -590,6 +663,47 @@ class CutoffController:
 # ---------------------------------------------------------------------------
 # Elastic membership: DMM controller + analytic fallback + refit.
 # ---------------------------------------------------------------------------
+
+
+def _spawn_refit(fit_fn, gen: int) -> tuple:
+    """Start a DMM refit on a daemon thread.
+
+    Returns the ``(thread, result_box, generation)`` refit-task triple
+    shared by :class:`ElasticController` and the multi-tenant
+    ``ps.PSServer``: the thread fills ``result_box["model"]`` when the
+    ELBO fit finishes, and the generation tag (the owner's resize count
+    at spawn time) lets :func:`_poll_refit_task` discard results that a
+    later resize made stale.  Dropping the triple abandons the fit
+    without ever blocking a decision tick on ``model.fit``.
+    """
+    box: dict = {}
+
+    def work():
+        box["model"] = fit_fn()
+
+    thread = threading.Thread(target=work, daemon=True)
+    task = (thread, box, gen)
+    thread.start()
+    return task
+
+
+def _poll_refit_task(task: tuple, gen: int, width: int):
+    """Non-blocking poll of a :func:`_spawn_refit` triple.
+
+    Returns ``(done, model)``: ``(False, None)`` while the fit thread is
+    still running; ``(True, model)`` once it finished AND the result is
+    still current (generation matches and the fitted width is the
+    owner's width); ``(True, None)`` for a finished-but-stale fit, which
+    is discarded, never installed.
+    """
+    thread, box, task_gen = task
+    if thread.is_alive():
+        return False, None
+    thread.join()
+    model = box.get("model")
+    if task_gen != gen or model is None or model.n_workers != width:
+        return True, None
+    return True, model
 
 
 class ElasticController:
@@ -716,7 +830,12 @@ class ElasticController:
         row = t
         if finished_mask is not None:
             m = np.asarray(finished_mask, bool)
-            if m.any() and not m.all():
+            if not m.any():
+                raise ValueError(
+                    "observe got an all-False finished_mask: a step with "
+                    "zero finished workers has no observed cutoff time to "
+                    "impute the trace row at")
+            if not m.all():
                 # plain imputation at the observed cutoff time is enough
                 # for refit TRAINING data; the active DMM still runs the
                 # truncated-normal imputation for its own window
@@ -780,31 +899,23 @@ class ElasticController:
         rows = np.stack(self._trace)
         n, seed = self._n, self.seed + self._resize_count
         if self.refit_async:
-            box: dict = {}
-            gen = self._resize_count
-
-            def work():
-                box["model"] = self._fit_model(rows, n, seed)
-
-            thread = threading.Thread(target=work, daemon=True)
-            self._refit_job = (thread, box, gen)
-            thread.start()
+            self._refit_job = _spawn_refit(
+                lambda: self._fit_model(rows, n, seed), self._resize_count)
         else:
             self._install_dmm(self._fit_model(rows, n, seed))
 
     def _poll_refit(self):
         if self._refit_job is None:
             return
-        thread, box, gen = self._refit_job
-        if thread.is_alive():
-            return
-        thread.join()
-        self._refit_job = None
-        model = box.get("model")
         # a resize since the fit started makes the result stale (wrong
-        # membership, possibly even the wrong width) — drop it
-        if (gen == self._resize_count and model is not None
-                and model.n_workers == self._n):
+        # membership, possibly even the wrong width) — _poll_refit_task
+        # drops it by generation/width
+        done, model = _poll_refit_task(self._refit_job, self._resize_count,
+                                       self._n)
+        if not done:
+            return
+        self._refit_job = None
+        if model is not None:
             self._install_dmm(model)
 
     def _fit_model(self, rows: np.ndarray, n: int,

@@ -135,6 +135,37 @@ def cutoff_and_iter_jax(samples, lo: int):
     return c, pred_iter
 
 
+def _cutoff_from_sorted_ragged(s, lo, n_real) -> jnp.ndarray:
+    """Throughput argmax over PRE-SORTED samples (K, n_pad) whose last
+    ``n_pad - n_real`` columns are +inf padding.
+
+    ``lo`` and ``n_real`` are TRACED int32 scalars, so one compiled
+    program serves every job width in a ragged bucket.  For
+    ``n_real == n_pad`` the masked argmax scans exactly the omega values
+    ``_cutoff_from_sorted`` scans (padding contributes omega = c/inf = 0
+    outside the mask), so full-width jobs keep the static path's answer.
+    """
+    n = s.shape[1]
+    cs = jnp.arange(1, n + 1, dtype=s.dtype)
+    omega = jnp.mean(cs[None, :] / jnp.maximum(s, 1e-9), axis=0)
+    i = jnp.arange(n)
+    valid = (i >= lo) & (i < n_real)
+    c = jnp.argmax(jnp.where(valid, omega, -jnp.inf)) + 1
+    return jnp.minimum(c, n_real).astype(jnp.int32)
+
+
+def cutoff_and_iter_ragged_jax(samples, lo, n_real):
+    """Ragged twin of ``cutoff_and_iter_jax``: samples (K, n_pad) with
+    +inf in the padded columns, traced floor ``lo`` and real width
+    ``n_real``.  The shared bitonic sort pushes the +inf pads to the top
+    columns, so order statistics of the real workers land in columns
+    [0, n_real) exactly as in a width-n_real sort."""
+    s = sorted_rows_jax(samples)
+    c = _cutoff_from_sorted_ragged(s, lo, n_real)
+    pred_iter = jnp.mean(jnp.take(s, c - 1, axis=1))
+    return c, pred_iter
+
+
 def optimal_cutoff_jax(samples, min_frac: float = 0.0) -> jnp.ndarray:
     """argmax_c E[Omega(c)] as a traced int32 scalar (1-based cutoff).
 

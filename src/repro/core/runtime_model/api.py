@@ -24,6 +24,35 @@ from repro.core.runtime_model import dmm as D
 from repro.core.runtime_model import guide as G
 
 
+# ---------------------------------------------------------------------------
+# Width-stable per-column RNG.
+#
+# A block draw like ``normal(key, (K, n))`` consumes the counter stream in
+# row-major order, so the SAME key at width n and width n_pad > n yields
+# different values in the shared columns — a padded bucket job could never
+# reproduce its standalone controller's samples.  Folding the column index
+# into the key makes column i a function of (key, i) alone: computing at any
+# padded width reproduces the width-n draws in columns [:n] bit-for-bit.
+# This is the RNG contract the ragged dispatch's parity guarantee rests on;
+# every width-shaped draw on the decision/observe path routes through these.
+# ---------------------------------------------------------------------------
+
+
+def _colwise_keys(key, n: int):
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def colwise_uniform(key, n: int):
+    """(n,) uniforms in [0, 1); entry i depends only on (key, i)."""
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(_colwise_keys(key, n))
+
+
+def colwise_normal(key, rows: int, n: int):
+    """(rows, n) standard normals; column i depends only on (key, i)."""
+    return jax.vmap(lambda k: jax.random.normal(k, (rows,)),
+                    out_axes=1)(_colwise_keys(key, n))
+
+
 @dataclass
 class RuntimeModel:
     n_workers: int
@@ -122,7 +151,7 @@ class RuntimeModel:
         tmu, tstd = D.transition(params["dmm"], z_T)
         z_next = tmu + tstd * jax.random.normal(k2, tmu.shape)
         emu, estd = D.emission(params["dmm"], z_next)     # (K, n)
-        x_next = emu + estd * jax.random.normal(k3, emu.shape)
+        x_next = emu + estd * colwise_normal(k3, k_samples, emu.shape[1])
         return x_next, emu, estd
 
     def predict_next(self, window: np.ndarray, k_samples: int = 64,
@@ -143,7 +172,7 @@ class RuntimeModel:
     # ------------------------------------------------------------------
     @staticmethod
     def _decide_core(params, ring, head, key, norm_scale, k_samples: int,
-                     lo: int):
+                     lo, width=None):
         """guide → transition → emission → sample → sort → argmax → moments
         over the device-resident ring buffer — the trace-level decision
         body that ``controller._fused_observe_decide`` jits (together with
@@ -155,10 +184,23 @@ class RuntimeModel:
         samples match the host reference path draw for draw.
 
         Every operand is either traced data or a job-independent static
-        (``k_samples``, ``lo``), so the whole body vmaps over a leading
-        JOB axis — ``controller._batched_observe_decide`` stacks J jobs'
-        (params, ring, head, key, norm_scale) and runs this once per tick
-        for the multi-tenant parameter server (``repro.ps``).
+        (``k_samples``), so the whole body vmaps over a leading JOB
+        axis — ``controller._batched_observe_decide_ragged`` stacks J
+        jobs' (params, ring, head, key, norm_scale, width, lo) and runs
+        this once per tick for the multi-tenant parameter server
+        (``repro.ps``).
+
+        ``width=None`` (the single-job path) keeps ``lo`` a static int
+        and the column count n as-is.  A TRACED ``width`` enables the
+        ragged mode: the ring is n_pad columns wide, columns >= width are
+        padding — they are zeroed out of the guide's input, their samples
+        forced to +inf (the bitonic sort pushes them past every real
+        order statistic, where the masked argmax in
+        ``order_stats.cutoff_and_iter_ragged_jax`` cannot pick them) and
+        ``lo`` is traced per job.  With zero-padded params
+        (``stack_models_padded``) and the column-wise RNG above, a padded
+        job computes the same decision its standalone width-n controller
+        would.
 
         Returns (cutoff int32 scalar, samples (K, n) raw,
         pred_mu (n,), pred_std (n,) — the aggregated predictive moments the
@@ -167,14 +209,23 @@ class RuntimeModel:
         the multi-job scheduler ranks by).
         """
         window = jnp.roll(ring, -head, axis=0) / norm_scale
+        n = ring.shape[1]
+        if width is not None:
+            colm = jnp.arange(n) < width
+            window = jnp.where(colm[None, :], window, 0.0)
         k1, k2, k3, _ = jax.random.split(key, 4)
         z_T = G.guide_sample_broadcast(params["guide"], window, k1, k_samples)
         tmu, tstd = D.transition(params["dmm"], z_T)
         z_next = tmu + tstd * jax.random.normal(k2, tmu.shape)
         emu, estd = D.emission(params["dmm"], z_next)     # (K, n)
-        x_next = emu + estd * jax.random.normal(k3, emu.shape)
+        x_next = emu + estd * colwise_normal(k3, k_samples, n)
         samples = x_next * norm_scale
-        cutoff, pred_iter = order_stats.cutoff_and_iter_jax(samples, lo)
+        if width is None:
+            cutoff, pred_iter = order_stats.cutoff_and_iter_jax(samples, lo)
+        else:
+            samples = jnp.where(colm[None, :], samples, jnp.inf)
+            cutoff, pred_iter = order_stats.cutoff_and_iter_ragged_jax(
+                samples, lo, width)
         pred_mu = jnp.mean(emu, axis=0) * norm_scale
         # mixture-variance law over the K mixture components:
         # Var = E[std^2] + Var[mu] (E[std]^2 under-disperses the tail)
@@ -202,6 +253,70 @@ def stack_models(models) -> Tuple[dict, jnp.ndarray]:
                              f"{shape} and {got}")
     params = jax.tree.map(lambda *xs: jnp.stack(xs),
                           *[m.params for m in models])
+    scales = jnp.asarray([m.norm_scale for m in models], jnp.float32)
+    return params, scales
+
+
+def _pad_width_params(params, n: int, n_pad: int):
+    """Zero-pad the width-shaped parameter leaves from n to n_pad workers.
+
+    The width appears in exactly four places (everything else is
+    (z_dim, hidden)-shaped and width-free): the emission mean head's last
+    layer (hidden, n) + bias, the emission std layer (n, n) + bias — padded
+    on BOTH axes — and the guide RNNs' input projections (n, hidden),
+    padded on the input axis.  The pads are structural, not inferred by
+    matching dim == n, which would misfire whenever n equals ``hidden``.
+
+    Zero pads leave the real columns' math unchanged (zero input rows add
+    nothing to any matmul) and keep the padded columns finite
+    (emission std = softplus(0) + 1e-3), so downstream masking is about
+    CORRECTNESS of the argmax, never about NaN containment.
+    """
+    if n == n_pad:
+        return params
+    d = n_pad - n
+    pad_last = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, d)])
+    pad_first = lambda a: jnp.pad(a, [(0, d)] + [(0, 0)] * (a.ndim - 1))
+    dmm = dict(params["dmm"])
+    emit_mu = [dict(l) for l in dmm["emit_mu"]]
+    emit_mu[-1] = {"w": pad_last(emit_mu[-1]["w"]),
+                   "b": pad_last(emit_mu[-1]["b"])}
+    dmm["emit_mu"] = emit_mu
+    emit_std = [dict(l) for l in dmm["emit_std"]]
+    emit_std[0] = {"w": pad_last(pad_first(emit_std[0]["w"])),
+                   "b": pad_last(emit_std[0]["b"])}
+    dmm["emit_std"] = emit_std
+    guide = dict(params["guide"])
+    for name in ("rnn_left", "rnn_right"):
+        rnn = dict(guide[name])
+        rnn["wx"] = pad_first(rnn["wx"])
+        guide[name] = rnn
+    return {"dmm": dmm, "guide": guide}
+
+
+def stack_models_padded(models, n_pad: int) -> Tuple[dict, jnp.ndarray]:
+    """Ragged twin of ``stack_models``: stack J RuntimeModels whose worker
+    widths may differ, zero-padding every width-shaped leaf to ``n_pad``
+    columns (``_pad_width_params``).  Architectures (lag, z_dim, hidden)
+    must still match — only the worker axis pads.  Used with the traced
+    ``width`` mode of ``RuntimeModel._decide_core``; for a bucket whose
+    jobs all share ``n_pad`` this is element-for-element ``stack_models``.
+    """
+    if not models:
+        raise ValueError("stack_models_padded needs at least one model")
+    arch = (models[0].lag, models[0].z_dim, models[0].hidden)
+    for m in models[1:]:
+        got = (m.lag, m.z_dim, m.hidden)
+        if got != arch:
+            raise ValueError(f"cannot stack RuntimeModels of architectures "
+                             f"{arch} and {got}")
+    for m in models:
+        if m.n_workers > n_pad:
+            raise ValueError(f"model width {m.n_workers} exceeds the bucket "
+                             f"pad width {n_pad}")
+    padded = [_pad_width_params(m.params, m.n_workers, n_pad)
+              for m in models]
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
     scales = jnp.asarray([m.norm_scale for m in models], jnp.float32)
     return params, scales
 

@@ -41,7 +41,7 @@ def build_multi_job(n_jobs: int = 3, n_per_job: int = 8, *,
                     fit_steps: int = 120, churn_events=(),
                     priorities=None, global_batch: int = 24,
                     refit_steps: int = 100, refit_fresh: int = 3,
-                    metrics_every: int = 10):
+                    refit_async: bool = False, metrics_every: int = 10):
     """J seeded tiny Trainers over a partitioned paper cluster, one
     shared PSServer.  Returns (server, jobs dict, sim)."""
     import jax
@@ -63,7 +63,8 @@ def build_multi_job(n_jobs: int = 3, n_per_job: int = 8, *,
     base = paper_cluster_158(seed=seed + 1, n_workers=n_total)
     sim = PartitionedSim(base, partition_ids(n_total, n_jobs),
                          events=list(churn_events))
-    server = PSServer(refit_steps=refit_steps, refit_fresh=refit_fresh)
+    server = PSServer(refit_steps=refit_steps, refit_fresh=refit_fresh,
+                      refit_async=refit_async)
     jobs: Dict[str, JobRun] = {}
     for j in range(n_jobs):
         job_id = f"job{j}"

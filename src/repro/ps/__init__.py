@@ -1,9 +1,11 @@
 """repro.ps — the multi-tenant parameter-server subsystem.
 
 One shared cluster, J concurrent training jobs, ONE device-resident
-decision path: per-job lag windows live stacked in a (J, lag+1, n) ring
-and every tick dispatches a single vmapped fused observe+decide instead
-of J separate jits (src/repro/core/README.md has the full contract).
+decision path: per-job lag windows live stacked in a (J, lag+1, n_max)
+ring — mixed worker widths ride the same stack via in-jit traced width
+masks — and every tick dispatches a single vmapped fused observe+decide
+instead of J separate jits (src/repro/core/README.md has the full
+ragged-dispatch contract).
 """
 from repro.ps.scheduler import (JobView, PriorityScheduler,
                                 RoundRobinScheduler, ShortestStepScheduler,

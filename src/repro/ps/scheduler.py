@@ -44,24 +44,38 @@ class RoundRobinScheduler:
     """Cyclic, starvation-free service order at equal priorities.
 
     The ring is the admission order; each tick serves the next
-    ``capacity`` jobs and advances the cursor by what it served, so the
-    service sequence is one consecutive run of the cyclic job sequence —
-    which is what makes the fairness bound exact.
+    ``capacity`` jobs, so the service sequence is one consecutive run of
+    the cyclic job sequence — which is what makes the fairness bound
+    exact.
+
+    The resume point is tracked as the ADMIT ORDER of the last job
+    served, never as an index into the ring: admits and evicts change the
+    ring's length, and an index cursor would silently land on a
+    different job after any membership change (serving someone twice and
+    skipping someone else, which breaks the fairness bound the property
+    tests pin).  Admit orders are unique and monotone, so "the first
+    ring entry admitted after the last one served (wrapping)" is
+    well-defined no matter who joined or left in between — an evicted
+    resume point degrades to its cyclic successor.
     """
 
     def __init__(self):
-        self._cursor = 0
+        self._last: Optional[int] = None    # admit_order of last served
 
     def order(self, views: Sequence[JobView],
               capacity: Optional[int] = None) -> List[str]:
         ring = sorted(views, key=lambda v: v.admit_order)
-        if not ring:
-            return []
         cap = _capacity(ring, capacity)
+        if cap == 0:
+            return []
         m = len(ring)
-        picks = [ring[(self._cursor + i) % m].job_id for i in range(cap)]
-        self._cursor = (self._cursor + cap) % m
-        return picks
+        start = 0
+        if self._last is not None:
+            start = next((i for i, v in enumerate(ring)
+                          if v.admit_order > self._last), 0)
+        picks = [ring[(start + i) % m] for i in range(cap)]
+        self._last = picks[-1].admit_order
+        return [v.job_id for v in picks]
 
 
 class PriorityScheduler:

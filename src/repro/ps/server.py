@@ -8,12 +8,16 @@ compute; this module multiplexes every job through ONE vmapped decision:
   * :class:`JobRegistry` — admit/evict/resize bookkeeping.  Each job owns
     its :class:`~repro.core.runtime_model.api.RuntimeModel`, its worker
     membership, a priority, and a checkpoint-group name.
-  * :class:`PSServer` — the decision plane.  Jobs of the same decision
-    shape (n_workers, lag, k_samples, min_frac floor) share a *bucket*
-    whose lag windows live stacked in a ``(J_b, lag+1, n)`` device ring;
-    ``flush()`` dispatches one ``controller._batched_observe_decide`` per
-    (bucket, imputation-mode) group per tick, and ``predict_cutoff`` only
-    materializes the job's int32 lazily out of the batched result.
+  * :class:`PSServer` — the decision plane.  Jobs of the same DMM
+    architecture (lag, k_samples, z_dim, hidden) share a *bucket* even at
+    MIXED worker widths: their lag windows live stacked in one
+    ``(J_b, lag+1, n_pad)`` device ring, their params are zero-padded to
+    the bucket width (``stack_models_padded``), and per-job TRACED width
+    masks inside the jit (``controller._batched_observe_decide_ragged``)
+    keep each job's decision exactly its own.  ``flush()`` therefore
+    issues ONE vmapped dispatch per tick regardless of the job mix —
+    observation rows, masks, predictive moments, PRNG keys and censor
+    flags travel in one host-packed upload.
   * :class:`JobHandle` — a controller-protocol facade (`predict_cutoff` /
     `observe` / `resize` / `seed_window` / `window_array`), so one
     ``launch.train.Trainer`` per job drives the shared server unchanged,
@@ -24,13 +28,17 @@ Per-job elasticity follows the :class:`~repro.core.controller
 job's window (survivors column-exact), detaches it from the batched path
 onto a warm-seeded Elfving fallback, and refits the DMM from the
 surviving trace once ``refit_fresh`` fresh observations arrive — then the
-job rejoins its (new) bucket.
+job rejoins its (new) bucket.  With ``refit_async=True`` the ELBO refit
+runs on a worker thread (``controller._spawn_refit`` — the exact task
+shape :class:`~repro.core.controller.ElasticController` uses), so a tick
+served during an active refit never blocks on ``model.fit``; results
+stale by resize generation are discarded, never installed.
 
 Semantics contract: a ``PSServer`` with J=1 produces the IDENTICAL cutoff
 sequence as a bare ``CutoffController(backend="device")`` over a seeded
-run (tests/test_ps_server.py), and J>1 jobs match J looped single-job
-controllers to f32-window precision — batching amortizes dispatch, it
-never changes the decision.
+run (tests/test_ps_server.py), and J>1 jobs — mixed widths included —
+match J looped single-job controllers to f32-window precision: batching
+amortizes dispatch, it never changes the decision.
 """
 from __future__ import annotations
 
@@ -44,45 +52,82 @@ import numpy as np
 
 from repro.core import controller as C
 from repro.core.cutoff import order_stats
-from repro.core.runtime_model.api import RuntimeModel, stack_models
+from repro.core.runtime_model.api import RuntimeModel, stack_models_padded
 
 
 # ---------------------------------------------------------------------------
-# Gather-in-jit batched entry: service an arbitrary subset of a bucket in
-# ONE dispatch (gather rows -> vmapped observe+decide -> scatter back).
+# Batched jit entries.  The flush path uploads ONE host-packed
+# (4, m, n_pad) f32 block [times, mask, mu, std], ONE (m, 4) uint32 key
+# block [decide key | impute base key], the (m,) impute steps and the (m,)
+# censor flags; everything else (key folding, mask decode, gather/scatter)
+# happens in-jit, so a tick costs a fixed number of transfers no matter
+# how many jobs it serves.
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "k_samples", "lo"))
-def _subset_observe_decide(params, rings, heads, idx, obs, keys, scales, *,
-                           mode: str, k_samples: int, lo: int):
+def _unpack_obs(pack, keys, steps, cen):
+    """Decode the packed observation block into the per-job obs pytree
+    ``controller._ragged_append_core`` consumes.  The impute keys are
+    folded in-jit (vmapped ``fold_in``), bit-identical to
+    ``controller._impute_key(seed, step)`` per job."""
+    return {"times": pack[0], "mask": pack[1] > 0.5,
+            "mu": pack[2], "std": pack[3],
+            "key": jax.vmap(jax.random.fold_in)(keys[:, 2:], steps),
+            "cen": cen}
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def _full_observe_decide(params, rings, heads, pack, keys, steps, cen,
+                         scales, widths, los, *, k_samples: int):
+    """The steady-state tick: every bucket row is serviced, in slot
+    order — no gather, no scatter, the whole stack updates in place."""
+    obs = _unpack_obs(pack, keys, steps, cen)
+    return C._batched_observe_decide_ragged(
+        params, rings, heads, obs, keys[:, :2], scales, widths, los,
+        k_samples=k_samples)
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def _subset_observe_decide(params, rings, heads, idx, pack, keys, steps,
+                           cen, scales, widths, los, *, k_samples: int):
+    """Service an arbitrary subset of a bucket in ONE dispatch (gather
+    rows -> vmapped observe+decide -> scatter back)."""
     p = jax.tree.map(lambda x: x[idx], params)
-    r, h, cut, samp, mu, std, it = C._batched_observe_decide(
-        p, rings[idx], heads[idx], obs, keys, scales[idx],
-        mode=mode, k_samples=k_samples, lo=lo)
+    obs = _unpack_obs(pack, keys, steps, cen)
+    r, h, cut, samp, mu, std, it = C._batched_observe_decide_ragged(
+        p, rings[idx], heads[idx], obs, keys[:, :2], scales[idx],
+        widths[idx], los[idx], k_samples=k_samples)
     return rings.at[idx].set(r), heads.at[idx].set(h), cut, samp, mu, std, it
 
 
-@functools.partial(jax.jit, static_argnames=("k_samples", "lo"))
-def _subset_decide(params, rings, heads, idx, keys, scales, *,
-                   k_samples: int, lo: int):
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def _full_decide(params, rings, heads, keys, scales, widths, los, *,
+                 k_samples: int):
+    return C._batched_decide_ragged(params, rings, heads, keys, scales,
+                                    widths, los, k_samples=k_samples)
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def _subset_decide(params, rings, heads, idx, keys, scales, widths, los,
+                   *, k_samples: int):
     # decide-only never mutates the ring, so return just the decision —
     # scattering identical rows back would copy the whole bucket stack
     p = jax.tree.map(lambda x: x[idx], params)
-    _, _, cut, samp, mu, std, it = C._batched_decide(
-        p, rings[idx], heads[idx], keys, scales[idx],
-        k_samples=k_samples, lo=lo)
-    return cut, samp, mu, std, it
+    return C._batched_decide_ragged(p, rings[idx], heads[idx], keys,
+                                    scales[idx], widths[idx], los[idx],
+                                    k_samples=k_samples)
 
 
-def _seed_ring(rows: np.ndarray, cap: int, n: int):
-    """Build the (cap, n) f32 ring + head a fresh controller would reach
-    by appending ``rows`` with full masks — without cap device dispatches.
-    Plain appends write the f32 times verbatim, so this is bit-exact."""
+def _seed_ring(rows: np.ndarray, cap: int, n: int, n_pad: int):
+    """Build the (cap, n_pad) f32 ring + head a fresh controller would
+    reach by appending width-n ``rows`` with full masks — without cap
+    device dispatches.  Plain appends write the f32 times verbatim, so
+    the real columns are bit-exact; pad columns stay zero (the decision
+    masks them out in-jit, it never reads them)."""
     rows = np.asarray(rows, np.float32)[-cap:]
-    ring = np.zeros((cap, n), np.float32)
+    ring = np.zeros((cap, n_pad), np.float32)
     m = rows.shape[0]
-    ring[:m] = rows
+    ring[:m, :n] = rows
     return ring, m % cap, min(m, cap)
 
 
@@ -117,9 +162,11 @@ class PSJob:
     trace: list = field(default_factory=list, repr=False)  # refit data
     # decision plumbing (device refs, fetched lazily)
     pending: Optional[tuple] = None     # (dstep, row, outputs dict)
-    pending_pred: Optional[tuple] = None  # (mu_src, std_src, samp_src, row)
-    last_iter: Optional[tuple] = None   # (iter_array, row)
+    pending_pred: Optional[tuple] = None  # (mu row, std row, samples, row)
+    last_iter: Optional[float] = None   # E[x_(c)] of the last decision
     queued: bool = False
+    # async refit in flight: controller._spawn_refit triple
+    refit_task: Optional[tuple] = None
     # architecture template for refits (widths change, shapes don't)
     lag: int = 20
     z_dim: int = 32
@@ -200,22 +247,51 @@ class JobRegistry:
 
 
 class _Bucket:
-    """Jobs of one decision shape, windows stacked in ONE device ring."""
+    """Jobs of one DMM architecture, windows stacked in ONE device ring.
 
-    def __init__(self, cap: int, n: int):
-        self.cap, self.n = cap, n
+    ``n_pad`` is the bucket's pad width — the max worker width of its
+    jobs.  It grows when a wider job joins (host repack, one upload) and
+    shrinks when the widest leaves, so a bucket that happens to be
+    same-width carries zero padding and its math is shape-identical to
+    an unpadded stack."""
+
+    def __init__(self, cap: int, k_samples: int):
+        self.cap = cap
+        self.k_samples = k_samples
+        self.n_pad = 0
         self.jobs: List[PSJob] = []
-        self.rings = jnp.zeros((0, cap, n), jnp.float32)
+        self.rings = jnp.zeros((0, cap, 0), jnp.float32)
         self.heads = jnp.zeros((0,), jnp.int32)
-        self._stacked = None            # (params, scales) cache
+        self._stacked = None    # (params, scales, widths, los) cache
 
     def stacked(self):
         if self._stacked is None:
-            self._stacked = stack_models([j.model for j in self.jobs])
+            params, scales = stack_models_padded(
+                [j.model for j in self.jobs], self.n_pad)
+            widths = jnp.asarray([j.width for j in self.jobs], jnp.int32)
+            los = jnp.asarray(
+                [order_stats.min_frac_floor(j.width, j.min_frac)
+                 for j in self.jobs], jnp.int32)
+            self._stacked = (params, scales, widths, los)
         return self._stacked
 
     def dirty(self):
         self._stacked = None
+
+    def repack(self, n_pad_new: int):
+        """Re-home every ring at a new pad width (host roundtrip, ONE
+        upload).  Caller guarantees every job width fits ``n_pad_new``,
+        so truncation only ever drops zero pad columns."""
+        if self.jobs:
+            old = np.asarray(self.rings)
+            new = np.zeros((old.shape[0], self.cap, n_pad_new), np.float32)
+            w = min(old.shape[2], n_pad_new)
+            new[:, :, :w] = old[:, :, :w]
+            self.rings = jnp.asarray(new)
+        else:
+            self.rings = jnp.zeros((0, self.cap, n_pad_new), jnp.float32)
+        self.n_pad = n_pad_new
+        self.dirty()
 
 
 class PSServer:
@@ -225,11 +301,12 @@ class PSServer:
 
         server.prefetch(serviced)        # cold decisions, one dispatch
         for job_id in serviced:          # scheduler's order
-            c = server.predict_cutoff(job_id)   # lazy int32 fetch
+            c = server.predict_cutoff(job_id)   # lazy host fetch
             ... run the job's train step with the bit array ...
             server.observe(job_id, times, mask)  # enqueues
         server.flush()                   # ONE vmapped dispatch per
-                                         # (bucket, mode) group
+                                         # architecture bucket — widths
+                                         # and impute modes all ride it
 
     ``flush`` is also called implicitly whenever a job with a queued
     observation is asked to predict, so a ``JobHandle`` behaves like a
@@ -239,12 +316,13 @@ class PSServer:
     def __init__(self, registry: Optional[JobRegistry] = None, *,
                  history: int = 512, refit_steps: int = 150,
                  refit_batch: int = 8, refit_fresh: int = 4,
-                 fallback_warmup: int = 3):
+                 refit_async: bool = False, fallback_warmup: int = 3):
         self.registry = registry if registry is not None else JobRegistry()
         self.history = history
         self.refit_steps = refit_steps
         self.refit_batch = refit_batch
         self.refit_fresh = refit_fresh
+        self.refit_async = refit_async
         self.fallback_warmup = fallback_warmup
         self._buckets: Dict[tuple, _Bucket] = {}
         self._queue: List[dict] = []
@@ -276,6 +354,7 @@ class PSServer:
             window = self.window_array(job_id)
         if job.bucket_sig is not None:
             self._remove(job)
+        job.refit_task = None
         self.registry.evict(job_id)
         return {"window": window, "trace": np.array(job.trace)}
 
@@ -286,19 +365,23 @@ class PSServer:
 
     # -- bucket plumbing ------------------------------------------------
     def _sig(self, job: PSJob) -> tuple:
-        """The full decision shape: window dims, sampling statics, AND
-        the model architecture — two same-width jobs with different
-        (z_dim, hidden) cannot share a param stack."""
-        lo = order_stats.min_frac_floor(job.width, job.min_frac)
-        return (job.width, job.cap, job.k_samples, lo, job.z_dim,
-                job.hidden)
+        """The decision ARCHITECTURE: window length, sampling count, and
+        DMM shape.  Deliberately width-free — mixed worker widths share
+        one bucket via pad-to-bucket ragged dispatch (the per-job width
+        and argmax floor ride the jit as traced operands).  Two jobs with
+        different (z_dim, hidden) still cannot share a param stack."""
+        return (job.cap, job.k_samples, job.z_dim, job.hidden)
 
     def _place(self, job: PSJob, window=None):
-        """Insert a dmm-mode job into its shape bucket, seeding its ring."""
+        """Insert a dmm-mode job into its architecture bucket, growing
+        the bucket pad width if this job is the widest, and seeding its
+        ring slot."""
         sig = self._sig(job)
         b = self._buckets.get(sig)
         if b is None:
-            b = self._buckets[sig] = _Bucket(job.cap, job.width)
+            b = self._buckets[sig] = _Bucket(job.cap, job.k_samples)
+        if job.width > b.n_pad:
+            b.repack(job.width)
         rows = np.asarray(window, np.float64) if window is not None else None
         if rows is not None and rows.ndim != 2:
             raise ValueError(f"seed window must be (T, n), got {rows.shape}")
@@ -307,7 +390,7 @@ class PSServer:
                              f"job width {job.width}")
         ring, head, count = _seed_ring(
             rows if rows is not None else np.zeros((0, job.width)),
-            job.cap, job.width)
+            job.cap, job.width, b.n_pad)
         b.rings = jnp.concatenate([b.rings, jnp.asarray(ring)[None]])
         b.heads = jnp.concatenate(
             [b.heads, jnp.asarray([head], jnp.int32)])
@@ -333,12 +416,19 @@ class PSServer:
         for k, other in enumerate(b.jobs):
             other.slot = k
         b.dirty()
-        job.bucket_sig = None
+        sig, job.bucket_sig = job.bucket_sig, None
         job.slot = -1
+        if not b.jobs:
+            del self._buckets[sig]
+            return
+        widest = max(j.width for j in b.jobs)
+        if widest < b.n_pad:
+            b.repack(widest)
 
     # -- window diagnostics / checkpointing -----------------------------
     def window_array(self, job_id: str) -> np.ndarray:
-        """The job's lag window, oldest row first (host copy).
+        """The job's lag window, oldest row first (host copy, pad
+        columns stripped).
 
         Raises ValueError while empty — the Trainer's checkpoint path
         relies on this to skip cold controllers."""
@@ -352,7 +442,8 @@ class PSServer:
             raise ValueError("window is empty")
         b = self._buckets[job.bucket_sig]
         head = int(b.heads[job.slot])
-        w = np.asarray(jnp.roll(b.rings[job.slot], -head, axis=0))
+        w = np.asarray(jnp.roll(b.rings[job.slot], -head,
+                                axis=0))[:, :job.width]
         return w[-job.count:] if job.count < job.cap else w
 
     def seed_window(self, job_id: str, rows: np.ndarray):
@@ -370,16 +461,13 @@ class PSServer:
                 job.fallback.buf.append(np.asarray(r, np.float64))
             return
         b = self._buckets[job.bucket_sig]
-        old_head = int(b.heads[job.slot])
-        old = np.asarray(b.rings[job.slot])
-        old = np.roll(old, -old_head, axis=0)
-        if job.count < job.cap:
-            old = old[job.cap - job.count:] if job.count else old[:0]
+        old = (np.asarray(self.window_array(job_id), np.float32)
+               if job.count else np.zeros((0, job.width), np.float32))
         merged = np.concatenate([old, np.asarray(rows, np.float32)])
-        ring, head, count = _seed_ring(merged, job.cap, job.width)
+        ring, head, count = _seed_ring(merged, job.cap, job.width, b.n_pad)
         b.rings = b.rings.at[job.slot].set(jnp.asarray(ring))
         b.heads = b.heads.at[job.slot].set(head)
-        job.count = count
+        job.count = min(job.count + rows.shape[0], job.cap)
         job.pending = None
         job.pending_pred = None
 
@@ -405,6 +493,7 @@ class PSServer:
         job = self.registry[job_id]
         if job.queued:
             self.flush()
+        self._poll_refit(job)
         job.step += 1
         if job.mode == "fallback":
             job.fallback_steps += 1
@@ -419,10 +508,30 @@ class PSServer:
             self._decide_jobs([job], [job.step])
         _, row, out = job.pending
         job.pending = None
-        job.pending_pred = (out["mu"], out["std"], out["samples"], row)
-        job.last_iter = (out["iter"], row)
-        # the only per-job host sync on the hot path: one int32
-        return int(out["cutoff"][row])
+        host = self._out_host(out)
+        # predictive moments come back as HOST rows (one shared fetch per
+        # batched output, amortized over its jobs) so the next flush can
+        # splice them straight into the packed upload
+        job.pending_pred = (host["mu"][row], host["std"][row],
+                            out["samples"], row)
+        job.last_iter = float(host["iter"][row])
+        return int(host["cutoff"][row])
+
+    @staticmethod
+    def _out_host(out: dict) -> dict:
+        """Host view of one batched decision output, fetched ONCE per
+        dispatch (cutoffs, moments and iter times for every job row in a
+        single transfer) and cached on the output dict; the (K, n)
+        sample clouds stay on device."""
+        h = out.get("host")
+        if h is None:
+            cut, mu, std, it = jax.device_get(
+                (out["cutoff"], out["mu"], out["std"], out["iter"]))
+            h = out["host"] = {"cutoff": np.asarray(cut),
+                               "mu": np.asarray(mu),
+                               "std": np.asarray(std),
+                               "iter": np.asarray(it)}
+        return h
 
     def prefetch(self, job_ids=None):
         """Batch the decide-only dispatch for every warmed job in
@@ -445,15 +554,19 @@ class PSServer:
         from ``predict_cutoff`` (which already incremented), step+1 when
         prefetching."""
         b = self._buckets[jobs[0].bucket_sig]
-        sig = jobs[0].bucket_sig
-        idx = jnp.asarray([j.slot for j in jobs], jnp.int32)
-        keys = C.stacked_prng_keys(
-            [j.seed + d for j, d in zip(jobs, dsteps)])
-        params, scales = b.stacked()
-        lo = sig[3]
-        cut, samp, mu, std, it = _subset_decide(
-            params, b.rings, b.heads, idx, keys, scales,
-            k_samples=sig[2], lo=lo)
+        keys = jnp.asarray(C._prng_key_rows(
+            [j.seed + d for j, d in zip(jobs, dsteps)]))
+        params, scales, widths, los = b.stacked()
+        slots = [j.slot for j in jobs]
+        if slots == list(range(len(b.jobs))):
+            cut, samp, mu, std, it = _full_decide(
+                params, b.rings, b.heads, keys, scales, widths, los,
+                k_samples=b.k_samples)
+        else:
+            idx = jnp.asarray(slots, jnp.int32)
+            cut, samp, mu, std, it = _subset_decide(
+                params, b.rings, b.heads, idx, keys, scales, widths, los,
+                k_samples=b.k_samples)
         self.dispatches += 1
         out = {"cutoff": cut, "samples": samp, "mu": mu, "std": std,
                "iter": it}
@@ -469,15 +582,25 @@ class PSServer:
                 f"width {job.width}; resize() before the resized step")
         mask = (np.ones(job.width, bool) if finished_mask is None
                 else np.asarray(finished_mask, bool))
+        if not mask.any():
+            # no coherent cutoff time exists to impute anything at — the
+            # old fall-through fed fully-censored times into the refit
+            # trace as if observed; reject loudly instead (the
+            # CutoffController/ElasticController convention)
+            raise ValueError(
+                f"job {job_id!r}: observe got an all-False finished_mask: "
+                "a step with zero finished workers has no observed cutoff "
+                "time to impute the censored entries at")
         # rolling imputed trace: refit training data (plain imputation at
         # the observed cutoff time, as ElasticController keeps it)
-        row = np.where(mask, t, t[mask].max()) if (
-            mask.any() and not mask.all()) else t
+        row = np.where(mask, t, t[mask].max()) if not mask.all() else t
         job.trace = (job.trace + [row])[-self.history:]
         job.fresh += 1
         if job.mode == "fallback":
             job.fallback.observe(times, finished_mask)
-            self._maybe_refit(job)
+            self._poll_refit(job)
+            if job.refit_task is None:
+                self._maybe_refit(job)
             return
         if job.queued:
             self.flush()        # one observation in flight per job, max
@@ -486,8 +609,8 @@ class PSServer:
         # full-sync observation takes the plain append even when moments
         # are pending (cheaper, and equivalence-by-construction with the
         # single-job reference rather than by where-merge accident)
-        mode = ("plain" if job.pending_pred is None or bool(mask.all())
-                else "censored")
+        cen = job.pending_pred is not None and not bool(mask.all())
+        pred = (job.pending_pred[0], job.pending_pred[1]) if cen else None
         if job.pending_pred is not None:
             # moments stay valid for the queued imputation; the sample
             # cache does not survive the window change
@@ -496,16 +619,20 @@ class PSServer:
         job.count = min(job.count + 1, job.cap)
         if job.warmed_up:
             self._queue.append({
-                "job": job, "times": t32, "mask": mask, "mode": mode,
-                "dstep": job.step + 1,
-                "pred": (job.pending_pred[:2] + (job.pending_pred[3],)
-                         if mode == "censored" else None)})
+                "job": job, "times": t32, "mask": mask, "cen": cen,
+                "pred": pred, "dstep": job.step + 1, "istep": job.step})
             job.queued = True
         else:
             # warmup: plain append straight into the job's ring slot
+            # (pad columns carry times 0 under a True mask, which the
+            # plain imputation writes through as 0 — the decision never
+            # reads them)
             b = self._buckets[job.bucket_sig]
-            obs = {"times": jnp.asarray(t32),
-                   "mask": jnp.asarray(mask)}
+            tp = np.zeros(b.n_pad, np.float32)
+            tp[:job.width] = t32
+            mp = np.ones(b.n_pad, bool)
+            mp[:job.width] = mask
+            obs = {"times": jnp.asarray(tp), "mask": jnp.asarray(mp)}
             ring, head = C._ring_append(b.rings[job.slot],
                                         b.heads[job.slot], obs, mode="plain")
             b.rings = b.rings.at[job.slot].set(ring)
@@ -513,63 +640,61 @@ class PSServer:
 
     def flush(self) -> int:
         """Dispatch every queued observation+decision: ONE vmapped fused
-        call per (bucket, imputation-mode) group.  Returns the number of
-        dispatches issued."""
+        call per architecture bucket — mixed widths AND mixed
+        plain/censored modes all ride the same dispatch (traced width
+        masks + traced censor flags).  Returns the dispatches issued."""
         if not self._queue:
             return 0
         queue, self._queue = self._queue, []
         groups: Dict[tuple, list] = {}
         for e in queue:
-            groups.setdefault((e["job"].bucket_sig, e["mode"]),
-                              []).append(e)
+            groups.setdefault(e["job"].bucket_sig, []).append(e)
         issued = 0
-        for (sig, mode), entries in groups.items():
+        for sig, entries in groups.items():
             b = self._buckets[sig]
-            jobs = [e["job"] for e in entries]
-            idx = jnp.asarray([j.slot for j in jobs], jnp.int32)
-            obs = {"times": jnp.asarray(np.stack(
-                       [e["times"] for e in entries])),
-                   "mask": jnp.asarray(np.stack(
-                       [e["mask"] for e in entries]))}
-            if mode == "censored":
-                obs["mu"] = self._stack_pred(entries, 0)
-                obs["std"] = self._stack_pred(entries, 1)
-                base = C.stacked_prng_keys(
-                    [j.seed + 1_000_003 for j in jobs])
-                obs["key"] = C._batched_impute_keys(
-                    base, jnp.asarray([j.step for j in jobs], jnp.uint32))
-            keys = C.stacked_prng_keys(
-                [j.seed + e["dstep"] for j, e in zip(jobs, entries)])
-            params, scales = b.stacked()
-            (b.rings, b.heads, cut, samp, mu, std, it) = (
-                _subset_observe_decide(
-                    params, b.rings, b.heads, idx, obs, keys, scales,
-                    mode=mode, k_samples=sig[2], lo=sig[3]))
+            m, npd = len(entries), b.n_pad
+            # one packed upload: [times, mask, mu, std] + keys/steps/cen
+            pack = np.zeros((4, m, npd), np.float32)
+            pack[1] = 1.0       # pad columns read mask=True (write 0.0)
+            keys = np.empty((m, 4), np.uint32)
+            steps = np.empty((m,), np.uint32)
+            cen = np.empty((m,), bool)
+            for r, e in enumerate(entries):
+                w = e["job"].width
+                pack[0, r, :w] = e["times"]
+                pack[1, r, :w] = e["mask"]
+                if e["cen"]:
+                    pack[2, r, :w] = e["pred"][0][:w]
+                    pack[3, r, :w] = e["pred"][1][:w]
+                steps[r] = e["istep"]
+                cen[r] = e["cen"]
+            keys[:, :2] = C._prng_key_rows(
+                [e["job"].seed + e["dstep"] for e in entries])
+            keys[:, 2:] = C._prng_key_rows(
+                [e["job"].seed + 1_000_003 for e in entries])
+            params, scales, widths, los = b.stacked()
+            slots = [e["job"].slot for e in entries]
+            args = (jnp.asarray(pack), jnp.asarray(keys),
+                    jnp.asarray(steps), jnp.asarray(cen),
+                    scales, widths, los)
+            if slots == list(range(len(b.jobs))):
+                (b.rings, b.heads, cut, samp, mu, std, it) = (
+                    _full_observe_decide(params, b.rings, b.heads, *args,
+                                         k_samples=b.k_samples))
+            else:
+                idx = jnp.asarray(slots, jnp.int32)
+                (b.rings, b.heads, cut, samp, mu, std, it) = (
+                    _subset_observe_decide(params, b.rings, b.heads, idx,
+                                           *args, k_samples=b.k_samples))
             issued += 1
             out = {"cutoff": cut, "samples": samp, "mu": mu, "std": std,
                    "iter": it}
-            for row, (j, e) in enumerate(zip(jobs, entries)):
-                j.pending = (e["dstep"], row, out)
-                j.queued = False
+            for row, e in enumerate(entries):
+                e["job"].pending = (e["dstep"], row, out)
+                e["job"].queued = False
         self.dispatches += issued
         self.ticks += 1
         return issued
-
-    @staticmethod
-    def _stack_pred(entries, which: int) -> jnp.ndarray:
-        """(m, n) predictive moments for a censored group.
-
-        Fast path: every entry's moments are rows of the SAME previous
-        batched output in stack order (the steady-state tick) — pass that
-        array through untouched.  Otherwise gather row by row."""
-        srcs = [e["pred"][which] for e in entries]
-        rows = [e["pred"][2] for e in entries]
-        first = srcs[0]
-        same = all(s is first for s in srcs)
-        if (same and first.ndim == 2 and len(rows) == first.shape[0]
-                and rows == list(range(len(rows)))):
-            return first
-        return jnp.stack([s[r] for s, r in zip(srcs, rows)])
 
     # -- diagnostics -----------------------------------------------------
     def predicted_iter_time(self, job_id: str) -> Optional[float]:
@@ -577,17 +702,14 @@ class PSServer:
         seconds) — the shortest-predicted-step-first scheduler's key.
         None before the first warmed-up decision (and in fallback mode,
         where the analytic controller has no sample cloud)."""
-        job = self.registry[job_id]
-        if job.last_iter is None:
-            return None
-        arr, row = job.last_iter
-        return float(arr[row])
+        return self.registry[job_id].last_iter
 
     def predicted_order_stats(self, job_id: str):
         job = self.registry[job_id]
         if job.pending_pred is None or job.pending_pred[2] is None:
             return None
-        samples = np.asarray(job.pending_pred[2][job.pending_pred[3]])
+        samples = np.asarray(
+            job.pending_pred[2][job.pending_pred[3]])[:, :job.width]
         return order_stats.mc_order_stats(samples)
 
     # -- elasticity ------------------------------------------------------
@@ -630,6 +752,10 @@ class PSServer:
         job.pending = None
         job.pending_pred = None
         job.last_iter = None
+        # abandon any in-flight refit WITHOUT blocking on its ELBO fit:
+        # the daemon thread keeps filling its orphaned result box, and
+        # _poll_refit_task would discard it by generation anyway
+        job.refit_task = None
         if model is not None:
             job.model = model
             self._place(job, rows)
@@ -656,6 +782,15 @@ class PSServer:
                 raise ValueError(f"members must be ({n_new},), got "
                                  f"{members.shape}")
             return members
+        if old.size == 0:
+            # np.clip(cm, 0, old.size - 1) on an empty member array would
+            # clip to index -1 (the LAST element of a non-empty array) —
+            # there are no surviving ids to carry over, so demand them
+            # explicitly instead of crashing or aliasing
+            raise ValueError(
+                f"resize({n_new}) from a width-0 member set has no "
+                "surviving global worker ids to remap; pass members= "
+                "explicitly")
         if col_map is None:
             col_map = np.concatenate([
                 np.arange(min(old.size, n_new)),
@@ -663,19 +798,58 @@ class PSServer:
         cm = np.asarray(col_map, int)
         return np.where(cm >= 0, old[np.clip(cm, 0, old.size - 1)], -1)
 
+    # -- refit plumbing (ElasticController's task shape, per job) --------
+    def _fit_model(self, job: PSJob, rows: np.ndarray, n: int,
+                   seed: int) -> RuntimeModel:
+        model = RuntimeModel(n_workers=n, lag=job.lag,
+                             z_dim=job.z_dim, hidden=job.hidden)
+        model.fit(rows, steps=self.refit_steps, batch=self.refit_batch,
+                  seed=seed)
+        return model
+
     def _maybe_refit(self, job: PSJob):
         if (job.fresh < self.refit_fresh
                 or len(job.trace) < job.cap + self.refit_batch):
             return
-        model = RuntimeModel(n_workers=job.width, lag=job.lag,
-                             z_dim=job.z_dim, hidden=job.hidden)
-        model.fit(np.stack(job.trace), steps=self.refit_steps,
-                  batch=self.refit_batch,
-                  seed=job.seed + job.resize_count)
+        # freeze width/seed now: a resize mid-fit must not retarget the
+        # running fit (its result is discarded by generation anyway)
+        rows = np.stack(job.trace)
+        n, seed = job.width, job.seed + job.resize_count
+        if self.refit_async:
+            job.refit_task = C._spawn_refit(
+                lambda: self._fit_model(job, rows, n, seed),
+                job.resize_count)
+        else:
+            self._install_refit(job, self._fit_model(job, rows, n, seed))
+
+    def _poll_refit(self, job: PSJob):
+        if job.refit_task is None:
+            return
+        done, model = C._poll_refit_task(job.refit_task, job.resize_count,
+                                         job.width)
+        if not done:
+            return
+        job.refit_task = None
+        if model is not None and job.mode == "fallback":
+            self._install_refit(job, model)
+
+    def _install_refit(self, job: PSJob, model: RuntimeModel):
         job.model = model
         job.mode = "dmm"
         job.fallback = None
         self._place(job, np.stack(job.trace[-job.cap:]))
+
+    def wait_refits(self, job_ids=None):
+        """Block until every in-flight async refit for ``job_ids``
+        (default: all) has finished and, if still current, been
+        installed.  Deterministic sync point for tests and benches — the
+        tick path itself never blocks on a fit."""
+        ids = job_ids if job_ids is not None else self.registry.ids()
+        for i in ids:
+            job = self.registry[i]
+            if job.refit_task is not None:
+                job.refit_task[0].join()
+                self._poll_refit(job)
 
 
 # ---------------------------------------------------------------------------

@@ -143,10 +143,13 @@ def test_dmm_beats_firstk_on_wall_clock_to_loss(fitted_model):
     ctl.seed_window(trace)
     hist_dmm = run(ctl)
     hist_fk = run(FirstKController(N_WORKERS, backup=2))
-    # target: the baseline's loss level at ~70% of its run — a level both
-    # runs comfortably reach, so the comparison is about CLOCK, not about
-    # who trained longer
-    target = float(np.mean([h["loss"] for h in hist_fk[45:50]]))
+    # target: the baseline's mid-run loss level, averaged over a 10-step
+    # window in the STEEP part of the curve — a level both runs comfortably
+    # reach, so the comparison is about CLOCK, not about who trained
+    # longer.  (The converged tail is a knife-edge: per-step loss noise is
+    # ~ the remaining decline there, so a tail-level crossing time measures
+    # noise, not throughput.)
+    target = float(np.mean([h["loss"] for h in hist_fk[35:45]]))
     clock_dmm = clock_to_loss(hist_dmm, target)
     clock_fk = clock_to_loss(hist_fk, target)
     assert clock_dmm is not None and clock_fk is not None
@@ -157,6 +160,26 @@ def test_dmm_beats_firstk_on_wall_clock_to_loss(fitted_model):
     assert final_dmm <= final_fk + 0.02, (final_dmm, final_fk)
     # the cutoff controller also simply finishes the same steps sooner
     assert hist_dmm[-1]["clock"] < hist_fk[-1]["clock"]
+
+
+def test_observe_all_false_mask_is_rejected(fitted_model):
+    """A step where NO worker finished has no observed cutoff time to
+    impute the censored entries at — observe must reject it loudly on
+    both backends instead of falling through and corrupting the window."""
+    rm, trace = fitted_model
+    for backend in ("device", "numpy"):
+        ctl = CutoffController(rm, k_samples=16, seed=0, backend=backend)
+        ctl.seed_window(trace)
+        ctl.predict_cutoff()
+        before = np.asarray(ctl.window_array()).copy()
+        with pytest.raises(ValueError, match="all-False"):
+            ctl.observe(np.ones(N_WORKERS),
+                        np.zeros(N_WORKERS, dtype=bool))
+        np.testing.assert_array_equal(ctl.window_array(), before)
+        # still serviceable after the rejected step
+        times = _sim(3).step()
+        it = order_stats.iter_time(times, 24)
+        ctl.observe(times, times <= it + 1e-12)
 
 
 def test_race_is_deterministic(fitted_model):

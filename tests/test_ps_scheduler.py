@@ -80,6 +80,78 @@ def test_round_robin_no_duplicate_service_within_tick():
 
 
 # ---------------------------------------------------------------------------
+# Round-robin under membership churn (the cursor-invalidation regression).
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_evict_does_not_skip_the_next_job():
+    """Directed regression: evicting the job just served must hand the
+    next tick to its cyclic SUCCESSOR.  An index cursor points one slot
+    past the served job; the evict shifts the ring left under it, so it
+    lands on j2 and silently skips j1."""
+    sched = RoundRobinScheduler()
+    views = _views(3)                            # j0, j1, j2
+    assert sched.order(views, 1) == ["j0"]
+    views = [v for v in views if v.job_id != "j0"]
+    assert sched.order(views, 1) == ["j1"]
+    assert sched.order(views, 1) == ["j2"]
+
+
+def test_round_robin_admit_preserves_cycle_position():
+    """A mid-cycle admit (admit orders are monotone, so newcomers join
+    the END of the ring) must not disturb whose turn is next; the
+    newcomer waits for the cycle to reach it."""
+    sched = RoundRobinScheduler()
+    views = _views(3)
+    assert sched.order(views, 1) == ["j0"]
+    views = views + [JobView(job_id="j9", priority=0.0, admit_order=9)]
+    assert sched.order(views, 1) == ["j1"]
+    assert sched.order(views, 1) == ["j2"]
+    assert sched.order(views, 1) == ["j9"]
+    assert sched.order(views, 1) == ["j0"]
+
+
+@settings(**SETTINGS)
+@given(J=st.integers(2, 6), cap=st.integers(1, 4), seed=st.integers(0, 1000))
+def test_round_robin_fairness_survives_churn(J, cap, seed):
+    """The fairness bound must hold for jobs that live through arbitrary
+    interleaved admit/evict/resize churn around them: at EVERY tick, the
+    service counts of any two always-present jobs differ by at most 1,
+    because the service sequence stays one consecutive run of the cyclic
+    admit order.  An index cursor fails this — a membership change
+    shifts which ring slot is "next", double-serving one side of the
+    removed slot and skipping the other."""
+    rng = np.random.default_rng(seed)
+    core = _views(J)
+    extras, next_order = [], J
+    counts = {v.job_id: 0 for v in core}
+    sched = RoundRobinScheduler()
+    for tick in range(12 * J):
+        ev = rng.integers(0, 4)
+        if ev == 0 and len(extras) < 6:          # admit a transient job
+            extras.append(JobView(job_id=f"x{next_order}", priority=0.0,
+                                  admit_order=next_order))
+            next_order += 1
+        elif ev == 1 and extras:                 # evict a transient job
+            extras.pop(int(rng.integers(0, len(extras))))
+        elif ev == 2:                            # resize: views rebuilt,
+            core = [JobView(job_id=v.job_id,    # same ids/orders — the
+                            priority=v.priority,  # policy must not lean
+                            admit_order=v.admit_order)  # on identity
+                    for v in core]
+        views = core + extras
+        served = sched.order(views, min(cap, len(views)))
+        assert len(served) == len(set(served))
+        for jid in served:
+            if jid in counts:
+                counts[jid] += 1
+        assert max(counts.values()) - min(counts.values()) <= 1, (
+            tick, counts)
+    # the churn never starved a long-lived job
+    assert min(counts.values()) > 0
+
+
+# ---------------------------------------------------------------------------
 # Priority: stable under insertion-order permutation.
 # ---------------------------------------------------------------------------
 

@@ -300,6 +300,175 @@ def test_checkpoint_group_roundtrip(fitted_16):
     assert h2.predict_cutoff() == h.predict_cutoff()
 
 
+# ---------------------------------------------------------------------------
+# Ragged mixed-width dispatch (the pad-to-bucket tentpole).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_mixed():
+    """Three fitted DMMs at DIFFERENT worker widths but the same decision
+    architecture (lag/z_dim/hidden/k) — the ragged-bucket case."""
+    out = []
+    for n in (16, 10, 6):
+        trace = paper_cluster_158(seed=n, n_workers=n).run(40)
+        rm = RuntimeModel(n_workers=n, lag=10).init(0)
+        rm.fit(trace, steps=50, batch=8, seed=0)
+        out.append((rm, trace))
+    return out
+
+
+def test_ragged_mixed_widths_one_bucket_one_dispatch(fitted_mixed):
+    """The tentpole acceptance: jobs at widths 16/10/6 share ONE padded
+    bucket and ONE vmapped dispatch per tick, and every job's cutoff
+    sequence is identical to its own single-job device controller —
+    padding amortizes dispatch, it never changes the decision."""
+    J = len(fitted_mixed)
+    srv = PSServer()
+    refs, handles = [], []
+    for j, (rm, tr) in enumerate(fitted_mixed):
+        ref = CutoffController(rm, k_samples=16, seed=11 * j,
+                               backend="device")
+        ref.seed_window(tr)
+        refs.append(ref)
+        handles.append(srv.admit(f"job{j}", rm, window=tr, k_samples=16,
+                                 seed=11 * j))
+    assert len({srv.registry[f"job{j}"].bucket_sig
+                for j in range(J)}) == 1, "mixed widths must share a bucket"
+    widths = [rm.n_workers for rm, _ in fitted_mixed]
+    sims_a = [paper_cluster_158(seed=300 + j, n_workers=w)
+              for j, w in enumerate(widths)]
+    sims_b = [paper_cluster_158(seed=300 + j, n_workers=w)
+              for j, w in enumerate(widths)]
+    censored = 0
+    for step in range(40):
+        srv.prefetch()
+        for j in range(J):
+            c_ref = refs[j].predict_cutoff()
+            c_ps = handles[j].predict_cutoff()
+            assert c_ref == c_ps, (step, j, c_ref, c_ps)
+            t = sims_a[j].step()
+            it = order_stats.iter_time(t, c_ref)
+            mask = t <= it + 1e-12
+            censored += int(not mask.all())
+            refs[j].observe(t, mask)
+            handles[j].observe(sims_b[j].step(), mask)
+        assert srv.flush() == 1, step   # the whole ragged mix: ONE dispatch
+    assert censored > 0         # the run exercised the censored path
+    for j in range(J):
+        np.testing.assert_allclose(handles[j].window_array(),
+                                   refs[j].window_array(),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ragged_bucket_repacks_on_widest_evict(fitted_mixed):
+    """Evicting the widest job must shrink the bucket's pad width so the
+    survivors stop paying for the departed job's columns — and the
+    survivors' decisions keep matching their references across the
+    repack."""
+    srv = PSServer()
+    handles = []
+    for j, (rm, tr) in enumerate(fitted_mixed):
+        handles.append(srv.admit(f"job{j}", rm, window=tr, k_samples=16,
+                                 seed=11 * j))
+    sig = srv.registry["job1"].bucket_sig
+    assert srv._buckets[sig].n_pad == 16
+    srv.evict("job0")                    # the width-16 job
+    assert srv._buckets[sig].n_pad == 10
+    rm1, _ = fitted_mixed[1]
+    ref = CutoffController(rm1, k_samples=16, seed=11, backend="device")
+    ref.seed_window(np.asarray(handles[1].window_array()))
+    sim = paper_cluster_158(seed=42, n_workers=10)
+    for step in range(10):
+        c_ref = ref.predict_cutoff()
+        c_ps = handles[1].predict_cutoff()
+        assert c_ref == c_ps, (step, c_ref, c_ps)
+        t = sim.step()
+        it = order_stats.iter_time(t, c_ref)
+        mask = t <= it + 1e-12
+        ref.observe(t, mask)
+        handles[1].observe(t.copy(), mask)
+        srv.flush()
+
+
+# ---------------------------------------------------------------------------
+# Observe-path regressions (all-False mask, width-0 members).
+# ---------------------------------------------------------------------------
+
+
+def test_observe_all_false_mask_is_rejected(fitted_16):
+    """A step with zero finished workers has no observed cutoff time to
+    impute against; the old path fell through and polluted the refit
+    trace with fully-censored times as if observed."""
+    rm, trace = fitted_16
+    srv = PSServer()
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    h.predict_cutoff()
+    before = np.asarray(h.window_array()).copy()
+    trace_len = len(h.job.trace)
+    with pytest.raises(ValueError, match="all-False"):
+        h.observe(np.ones(16), np.zeros(16, dtype=bool))
+    # the rejected step mutated nothing
+    np.testing.assert_array_equal(h.window_array(), before)
+    assert len(h.job.trace) == trace_len
+    # and the job is still serviceable
+    t = paper_cluster_158(seed=2, n_workers=16).step()
+    h.observe(t, t <= np.sort(t)[7] + 1e-12)
+    assert srv.flush() == 1
+
+
+def test_resized_members_width0_is_a_clear_error():
+    with pytest.raises(ValueError, match="width-0"):
+        PSServer._resized_members(np.array([], dtype=int), 4, None, None)
+    # explicit members always work, including from width 0
+    got = PSServer._resized_members(np.array([], dtype=int), 3,
+                                    None, np.array([7, 8, 9]))
+    np.testing.assert_array_equal(got, [7, 8, 9])
+
+
+# ---------------------------------------------------------------------------
+# Async refit: a tick during an active refit never blocks on model.fit.
+# ---------------------------------------------------------------------------
+
+
+def test_async_refit_never_blocks_a_tick(fitted_16, monkeypatch):
+    import threading
+    rm, trace = fitted_16
+    srv = PSServer(refit_steps=5, refit_fresh=2, refit_async=True)
+    ha = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    hb = srv.admit("b", rm, window=trace, k_samples=16, seed=1)
+    gate = threading.Event()
+    real_fit = RuntimeModel.fit
+
+    def gated_fit(self, *args, **kwargs):
+        gate.wait(timeout=60)
+        return real_fit(self, *args, **kwargs)
+
+    monkeypatch.setattr(RuntimeModel, "fit", gated_fit)
+    hb.resize(12, col_map=np.arange(12))
+    assert hb.mode == "fallback"
+    sim_a = paper_cluster_158(seed=6, n_workers=16)
+    sim_b = paper_cluster_158(seed=7, n_workers=12)
+    # tick both jobs well past the refit trigger while the fit thread is
+    # gated shut: every tick must complete without blocking on the fit
+    for step in range(12):
+        for h, sim in ((ha, sim_a), (hb, sim_b)):
+            c = h.predict_cutoff()
+            t = sim.step()
+            it = order_stats.iter_time(t, c)
+            h.observe(t, t <= it + 1e-12)
+        srv.flush()
+    task = srv.registry["b"].refit_task
+    assert task is not None and task[0].is_alive(), \
+        "the refit should still be running in the background"
+    assert hb.mode == "fallback"     # stale result never pre-installed
+    gate.set()
+    srv.wait_refits()
+    assert hb.mode == "dmm" and hb.job.model.n_workers == 12
+    # the healthy wide job never lost its model to b's refit churn
+    assert ha.mode == "dmm" and ha.job.model is rm
+
+
 def test_predicted_iter_time_matches_samples(fitted_16):
     """The scheduler's ranking key must equal E[x_(c)] of the decision's
     own sample cloud."""
