@@ -1,0 +1,152 @@
+"""Straggler-policy frontier: six policies raced on wall-clock-to-loss.
+
+The paper's cutoff discard is ONE point on an error–runtime frontier.
+This bench races the whole frontier on a seeded straggler-heavy cluster
+— identical init, data stream, and step-time draws for every policy,
+only the straggler policy differs:
+
+  * ``sync``     — full sync (wait for everyone; no straggler error)
+  * ``static``   — fixed cutoff c < n (Chen et al.)
+  * ``firstk``   — first n - b arrivals by count (backup workers)
+  * ``dmm``      — the paper's runtime-model cutoff (CutoffController)
+  * ``anytime``  — DMM cutoff + stragglers contribute completed-microbatch
+                   PARTIAL sums weighted by their fraction (Ferdinand &
+                   Draper; ``AnytimeController``)
+  * ``stale``    — DMM cutoff + a dropped step's mean gradient folded into
+                   the NEXT step with a decayed weight (Dutta et al.;
+                   ``StaleReuseController``)
+
+Race protocol: full sync runs ``steps`` steps and sets BOTH the loss
+target (its trailing final loss) and the simulated clock budget; every
+other policy then runs until it exhausts that same clock budget — a
+cutoff policy takes MORE steps in the same wall-clock, which is exactly
+the trade the frontier measures.  ``launch.train.clock_to_loss`` (full
+trailing window) decides who got to the target first.
+
+All six run the explicit ``mask_agg="psum"`` aggregation (the only path
+that materializes per-worker partial sums), ``GRAD_ACCUM`` microbatches
+per worker.  Output: CSV rows + ``BENCH_frontier.json``
+(schema ``bench_frontier/v1``), consumed by the ``scripts/ci.sh --bench``
+gate and the ``paper_figures.bench_frontier_panel`` figure.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+GRAD_ACCUM = 4
+DECAY = 0.5
+# heavy straggler tail (the paper's Fig. 2 motivation): ~1 spiked worker
+# per step at ~3.5x runtime — the regime where discarding pays and where
+# the partial/stale policies have real work to recover
+SIM = dict(n_nodes=4, spike_prob=0.12, spike_scale=2.5)
+
+
+def _race(steps: int):
+    import jax
+
+    from repro import optim
+    from repro.cluster.simulator import ClusterSim
+    from repro.configs.base import bench_tiny_config
+    from repro.core.controller import (AnytimeController, CutoffController,
+                                       FirstKController, FullSyncController,
+                                       StaleReuseController,
+                                       StaticCutoffController)
+    from repro.core.runtime_model.api import RuntimeModel
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.train import Trainer, clock_to_loss, jit_train_step
+    from repro.models import model as M
+
+    cfg = bench_tiny_config()
+    n = 8
+    trace = ClusterSim(n_workers=n, seed=0, **SIM).run(120)
+    rm = RuntimeModel(n_workers=n, lag=10).init(0)
+    rm.fit(trace, steps=100, batch=8, seed=0)
+    opt = optim.adamw(1e-2)
+    step_fn = jit_train_step(cfg, opt, grad_accum=GRAD_ACCUM,
+                             mask_agg="psum")
+    step_fn_stale = jit_train_step(cfg, opt, grad_accum=GRAD_ACCUM,
+                                   mask_agg="psum", stale_reuse=True)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    def dmm():
+        ctl = CutoffController(rm, k_samples=32, seed=0)
+        ctl.seed_window(trace[-40:])
+        return ctl
+
+    policies = [
+        ("sync", FullSyncController(n), step_fn),
+        ("static", StaticCutoffController(n, cutoff=7), step_fn),
+        ("firstk", FirstKController(n, backup=1), step_fn),
+        ("dmm", dmm(), step_fn),
+        ("anytime", AnytimeController(dmm(), n_micro=GRAD_ACCUM), step_fn),
+        ("stale", StaleReuseController(dmm(), decay=DECAY), step_fn_stale),
+    ]
+
+    runs = {}
+    budget = None
+    for name, ctl, fn in policies:
+        data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16,
+                               global_batch=32, seed=0)
+        tr = Trainer(cfg=cfg, step_fn=fn, data=data, controller=ctl,
+                     timer=ClusterSim(n_workers=n, seed=9, **SIM),
+                     n_workers=n, mask_agg="psum", metrics_every=0)
+        tr.restore_or_init(init_fn)
+        t0 = time.perf_counter()
+        if name == "sync":
+            tr.run(steps)
+            budget = tr.sim_clock      # everyone gets sync's clock budget
+        else:
+            while tr.sim_clock < budget and tr.step < 6 * steps:
+                tr.run(10)
+        wall = time.perf_counter() - t0
+        runs[name] = {"tr": tr, "steps_per_s": tr.step / wall}
+
+    target = float(np.mean(
+        [h["loss"] for h in runs["sync"]["tr"].history[-3:]]))
+
+    race = []
+    for name, _, _ in policies:
+        tr = runs[name]["tr"]
+        hist = tr.history
+        t_loss = clock_to_loss(hist, target)
+        row = {"policy": name,
+               "clock_to_loss": t_loss,
+               "final_loss": float(np.mean([h["loss"]
+                                            for h in hist[-3:]])),
+               "steps": len(hist),
+               "total_clock": float(hist[-1]["clock"]),
+               "mean_cutoff": float(np.mean([h["c"] for h in hist])),
+               "steps_per_s": runs[name]["steps_per_s"]}
+        race.append(row)
+        fmt = "n/a" if t_loss is None else f"{t_loss:.1f}s"
+        emit(f"frontier/{name}_clock_to_loss", 0.0,
+             f"{fmt};final={row['final_loss']:.3f};"
+             f"c={row['mean_cutoff']:.2f};steps={row['steps']}")
+    return {"arch": f"{cfg.name}/bench_tiny", "n_workers": n,
+            "sync_steps": steps, "clock_budget": float(budget),
+            "grad_accum": GRAD_ACCUM, "stale_decay": DECAY,
+            "sim": dict(SIM), "target_loss": target, "race": race}
+
+
+def bench_frontier(quick: bool = False,
+                   out_path: str = "BENCH_frontier.json",
+                   steps: int = None):
+    steps = steps if steps is not None else (60 if quick else 120)
+    results = {
+        "schema": "bench_frontier/v1",
+        "quick": quick,
+        "frontier": _race(steps),
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("frontier/json_written", 0.0, out_path)
+    return results

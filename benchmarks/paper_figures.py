@@ -240,3 +240,40 @@ def bench_censoring_ablation(steps=60):
                             / times.mean())
             ctl.observe(times, times <= it + 1e-12)
         emit(f"censoring/{label}_rel_mae", 0.0, f"{np.mean(maes):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Straggler-policy frontier panel (PAPERS.md: Ferdinand & Draper; Dutta
+# et al.) — the error–runtime frontier as a figure-style table.
+# ---------------------------------------------------------------------------
+
+
+def bench_frontier_panel(steps=60, json_path="BENCH_frontier.json"):
+    """Wall-clock-to-loss per straggler policy, normalized to full sync.
+
+    Reuses an existing ``BENCH_frontier.json`` when present (the bench
+    already raced at full size); otherwise runs the quick race inline.
+    Emits one row per policy: speedup over full sync on clock-to-target
+    (n/a when the policy never reached it inside sync's clock budget)
+    plus its final loss at the shared budget.
+    """
+    import json as _json
+    import os
+
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            frontier = _json.load(f)["frontier"]
+    else:
+        from benchmarks.frontier_bench import _race
+        frontier = _race(steps)
+
+    by = {r["policy"]: r for r in frontier["race"]}
+    t_sync = by["sync"]["clock_to_loss"]
+    for name, row in by.items():
+        t = row["clock_to_loss"]
+        speedup = ("n/a" if t is None or t_sync is None
+                   else f"{t_sync / t:.2f}x")
+        emit(f"frontierfig/{name}", 0.0,
+             f"speedup_vs_sync={speedup};final={row['final_loss']:.3f};"
+             f"c={row['mean_cutoff']:.2f}")
+    return frontier

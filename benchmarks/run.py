@@ -2,12 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
-                                           [--only agg|controller|elastic|ps]
+                              [--only agg|controller|elastic|ps|frontier]
 
 ``--only agg`` / ``--only controller`` / ``--only elastic`` / ``--only
-ps`` run a single section (what ``scripts/ci.sh --bench`` uses); they
-also write ``BENCH_agg.json`` / ``BENCH_controller.json`` /
-``BENCH_elastic.json`` / ``BENCH_ps.json`` respectively.
+ps`` / ``--only frontier`` run a single section (what ``scripts/ci.sh
+--bench`` uses); they also write ``BENCH_agg.json`` /
+``BENCH_controller.json`` / ``BENCH_elastic.json`` / ``BENCH_ps.json`` /
+``BENCH_frontier.json`` respectively.
 """
 import argparse
 import sys
@@ -19,13 +20,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the 2175-worker Cray model + shrink fig4")
     ap.add_argument("--only", default=None,
-                    choices=["agg", "controller", "elastic", "ps"],
+                    choices=["agg", "controller", "elastic", "ps",
+                             "frontier"],
                     help="run a single benchmark section")
     args = ap.parse_args()
 
     from benchmarks import (agg_bench, controller_bench, elastic_bench,
-                            kernels_bench, paper_figures, ps_bench,
-                            roofline)
+                            frontier_bench, kernels_bench, paper_figures,
+                            ps_bench, roofline)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -45,6 +47,11 @@ def main() -> None:
         ps_bench.bench_ps(quick=args.quick)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
+    if args.only == "frontier":
+        frontier_bench.bench_frontier(quick=args.quick)
+        paper_figures.bench_frontier_panel()
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
     paper_figures.bench_elfving_table()
     paper_figures.bench_fig2_throughput()
     paper_figures.bench_fig3_prediction(cray=not args.quick)
@@ -57,6 +64,8 @@ def main() -> None:
     controller_bench.bench_controller(quick=args.quick)
     elastic_bench.bench_elastic(quick=args.quick)
     ps_bench.bench_ps(quick=args.quick)
+    frontier_bench.bench_frontier(quick=args.quick)
+    paper_figures.bench_frontier_panel()
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

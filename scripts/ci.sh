@@ -7,7 +7,8 @@
 #   scripts/ci.sh --bench    # perf runs -> BENCH_agg.json +
 #                            #              BENCH_controller.json +
 #                            #              BENCH_elastic.json +
-#                            #              BENCH_ps.json
+#                            #              BENCH_ps.json +
+#                            #              BENCH_frontier.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,6 +32,24 @@ for r in bad:
     print(f"ps decision REGRESSION: n={r['n_workers']} J={r['n_jobs']} "
           f"speedup={r['speedup']:.3f}x (< 1.0)", file=sys.stderr)
 sys.exit(1 if bad else 0)
+EOF
+    python -m benchmarks.run --quick --only frontier "$@"
+    # gate: at least one non-discard straggler policy (anytime partial
+    # sums or stale reuse) must beat full sync on wall-clock-to-loss in
+    # the seeded race — the frontier's reason to exist
+    python - <<'EOF'
+import json, sys
+race = json.load(open("BENCH_frontier.json"))["frontier"]["race"]
+by = {r["policy"]: r["clock_to_loss"] for r in race}
+t_sync = by["sync"]
+winners = [p for p in ("anytime", "stale")
+           if by[p] is not None and (t_sync is None or by[p] < t_sync)]
+if not winners:
+    print(f"frontier REGRESSION: no non-discard policy beats full sync "
+          f"(sync={t_sync}, anytime={by['anytime']}, stale={by['stale']})",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"frontier gate ok: {', '.join(winners)} beat sync", file=sys.stderr)
 EOF
     exit 0
 fi

@@ -47,14 +47,24 @@ def _treedef_of(tree):
 
 def save(ckpt_dir: str, step: int, state: Dict[str, Any],
          keep: int = 3) -> str:
-    """Synchronous atomic save.  state: dict of pytrees / plain values."""
+    """Synchronous atomic save.  state: dict of pytrees / plain values.
+
+    Re-saving an EXISTING step (a warm-restarted run re-checkpoints the
+    step it restored at) must stay atomic too: the old dir is first
+    renamed aside to ``stale.<step>`` and only removed after the new dir
+    is published, so there is no instant at which ``step_<step>`` is
+    missing or partial — a crash anywhere leaves either the old or the
+    new checkpoint fully in place.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    stale = os.path.join(ckpt_dir, f"stale.{step}")
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    for leftover in (tmp, stale):    # debris from an earlier crash
+        if os.path.exists(leftover):
+            shutil.rmtree(leftover)
 
+    os.makedirs(tmp)
     manifest = {"step": step, "groups": {}}
     for name, tree in state.items():
         flat = _flatten(tree)
@@ -66,8 +76,10 @@ def save(ckpt_dir: str, step: int, state: Dict[str, Any],
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic publish
+        os.rename(final, stale)  # atomic: old stays restorable until...
+    os.rename(tmp, final)        # ...the new one is published
+    if os.path.exists(stale):
+        shutil.rmtree(stale)
     _gc(ckpt_dir, keep)
     return final
 

@@ -92,6 +92,34 @@ class ClusterSim:
 
 
 # ---------------------------------------------------------------------------
+# Progress query: partial work completed by a wall-clock deadline.
+# ---------------------------------------------------------------------------
+
+
+def microbatch_progress(times, t: float, n_micro: int) -> np.ndarray:
+    """Fraction of ``n_micro`` microbatches each worker finishes by time ``t``.
+
+    ``times`` are full-step runtimes (any width — a ClusterSim row, a
+    ChurnSim active-set row, or a measured vector); a worker's microbatches
+    are assumed uniform across its step, so worker w completes
+    ``floor(n_micro * t / times[w])`` of them by the deadline, capped at
+    ``n_micro``.  The returned fractions are exact multiples of
+    ``1 / n_micro`` — the granularity anytime-SGD partial gradient sums
+    actually come in (a worker cannot ship half a microbatch) — and a
+    worker with ``times[w] <= t`` returns exactly 1.0.
+
+    This is the query the :class:`~repro.core.controller.AnytimeController`
+    turns a cutoff time into a per-worker f32 contribution vector with.
+    """
+    if n_micro < 1:
+        raise ValueError(f"n_micro must be >= 1, got {n_micro}")
+    times = np.asarray(times, np.float64)
+    frac = np.clip(t / np.maximum(times, 1e-300), 0.0, 1.0)
+    # the 1e-9 guard keeps an exact k/n_micro ratio from flooring to k-1
+    return np.floor(frac * n_micro + 1e-9) / float(n_micro)
+
+
+# ---------------------------------------------------------------------------
 # Churn layer: elastic worker membership on top of any runtime source.
 # ---------------------------------------------------------------------------
 

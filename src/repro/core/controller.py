@@ -158,6 +158,126 @@ class ElfvingController(FullSyncController):
 
 
 # ---------------------------------------------------------------------------
+# Straggler-policy frontier: what a dropped worker contributes.
+#
+# The paper's controllers above all share ONE straggler policy — discard:
+# a worker outside the cutoff contributes nothing and its mask bit is 0.
+# The related work shows discard is one point on an error–runtime
+# frontier; the two wrappers below implement the other two points the
+# frontier bench races (benchmarks/frontier_bench.py), reusing any of the
+# controllers above for the CUTOFF decision and changing only what the
+# dropped workers contribute.  src/repro/core/README.md has the policy
+# contract table.
+# ---------------------------------------------------------------------------
+
+
+class _PolicyWrapper:
+    """Delegating base for straggler-policy wrappers: the inner controller
+    owns the cutoff decision, the observe window, and the elastic resize
+    protocol; the wrapper changes only the contribution semantics."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    @property
+    def n(self) -> int:
+        return self.inner.n
+
+    def predict_cutoff(self) -> int:
+        return self.inner.predict_cutoff()
+
+    def observe(self, times, finished_mask=None):
+        return self.inner.observe(times, finished_mask)
+
+    def resize(self, n_workers: int, col_map=None, model=None,
+               members=None):
+        return self.inner.resize(n_workers, col_map=col_map, model=model,
+                                 members=members)
+
+    def predicted_order_stats(self):
+        fn = getattr(self.inner, "predicted_order_stats", None)
+        return fn() if fn is not None else None
+
+    def window_array(self) -> np.ndarray:
+        fn = getattr(self.inner, "window_array", None)
+        if fn is None:
+            # same contract as an empty CutoffController window: the
+            # checkpoint path skips controllers with nothing to persist
+            raise ValueError("inner controller keeps no window")
+        return fn()
+
+    def seed_window(self, traces: np.ndarray):
+        fn = getattr(self.inner, "seed_window", None)
+        if fn is not None:
+            return fn(traces)
+
+
+class AnytimeController(_PolicyWrapper):
+    """Anytime SGD (Ferdinand & Draper): stragglers contribute PARTIAL
+    gradient sums at the cutoff instead of being discarded.
+
+    The inner controller still picks the cutoff c; the cutoff time is the
+    c-th fastest worker's runtime as before.  But where the discard policy
+    hands the aggregation a 0/1 bit array, :meth:`contribution` returns a
+    per-worker f32 vector: a worker that completed ``k`` of its
+    ``n_micro`` grad-accum microbatches by the cutoff time contributes its
+    partial sum with weight ``k / n_micro``
+    (``cluster.simulator.microbatch_progress``).  Finishers contribute
+    exactly 1.0 (tie-consistent with the bit array), so with
+    ``n_micro=1`` — or a cluster whose stragglers never complete a single
+    microbatch by the cutoff — the vector reduces to the discard bit
+    array bit-for-bit.
+
+    The runtime model's view is unchanged: a straggler's full-step
+    runtime is still censored at the cutoff time (it shipped a partial
+    sum, not a completion time), so ``observe`` keeps the discard
+    policy's finished mask.
+    """
+
+    def __init__(self, inner, n_micro: int = 1):
+        super().__init__(inner)
+        if n_micro < 1:
+            raise ValueError(f"n_micro must be >= 1, got {n_micro}")
+        self.n_micro = int(n_micro)
+
+    def contribution(self, times, c: int) -> np.ndarray:
+        """Per-worker f32 contribution vector for a step decided at
+        cutoff ``c``: 1.0 for the c finishers, the completed-microbatch
+        fraction at the cutoff time for everyone else."""
+        from repro.cluster.simulator import microbatch_progress
+        times = np.asarray(times, np.float64)
+        order = np.argsort(times, kind="stable")
+        cutoff_time = float(times[order[c - 1]])
+        contrib = microbatch_progress(times, cutoff_time,
+                                      self.n_micro).astype(np.float32)
+        contrib[order[:c]] = 1.0       # finishers, exactly (tie-consistent)
+        return contrib
+
+
+class StaleReuseController(_PolicyWrapper):
+    """Stale-gradient reuse (Dutta et al.): a dropped worker's LATE
+    gradient is not thrown away — the Trainer buffers it and folds it
+    into the NEXT step with a staleness-decayed weight.
+
+    The wrapper itself only carries the policy knob: ``stale_decay`` is
+    the weight a one-step-stale gradient enters the next step's masked
+    mean with (relative to a fresh gradient's 1.0).  The Trainer detects
+    the attribute, routes the step's dropped-gradient mean back into the
+    next step's batch, and the ``stale_reuse=True`` train step does the
+    fold in-jit (``launch.train.make_train_step``) — mask_agg="psum"
+    only, since the fold needs per-worker gradients.  ``stale_decay=0``
+    is exactly the discard policy (the fold multiplies by 0.0 and the
+    parameters match bit-for-bit — tests/test_frontier.py).
+    """
+
+    def __init__(self, inner, decay: float = 0.5):
+        super().__init__(inner)
+        if not 0.0 <= decay <= 1.0:
+            raise ValueError(f"decay must be in [0, 1], got {decay}")
+        self.stale_decay = float(decay)
+
+
+# ---------------------------------------------------------------------------
 # Elastic membership: window remapping across worker-set changes.
 # ---------------------------------------------------------------------------
 

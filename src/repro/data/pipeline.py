@@ -50,6 +50,13 @@ class SyntheticTokens:
             rng = np.random.default_rng((self.seed, step))
             n = self.global_batch
         else:
+            if self.global_batch % n_workers != 0:
+                raise ValueError(
+                    f"global batch {self.global_batch} is not divisible by "
+                    f"{n_workers} workers — per-worker draws would silently "
+                    f"truncate and disagree with the worker=None full batch "
+                    f"(pick a worker count that divides {self.global_batch},"
+                    f" matching the Trainer's B % W check)")
             rng = np.random.default_rng((self.seed, step, worker))
             n = self.global_batch // n_workers
         toks = self._gen(rng, n)

@@ -96,7 +96,7 @@ def _split_batch(batch, parts: int):
 def make_train_step(cfg, optimizer: optim.Optimizer, *,
                     grad_accum: int = 1, aux_coef: float = 0.01,
                     compress_pod_grads: bool = False,
-                    mask_agg: str = "weights"):
+                    mask_agg: str = "weights", stale_reuse: bool = False):
     """Returns train_step(state, batch) -> (state, metrics).
 
     state = {"params", "opt", ["ef"]}.
@@ -105,23 +105,50 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
     expanded by ``dist.collectives.example_weights``; the masked mean is
     implicit in the loss normalization + the DP gradient psum.
 
-    mask_agg="psum": batch["mask"] is the per-worker bit array itself
-    ((n_workers,) float, n_workers | global batch); the step scans the
-    per-worker microbatches, stacks their gradients on a leading worker
-    dim, and aggregates with ``collectives.masked_grad_mean`` — an
+    mask_agg="psum": batch["mask"] is the per-worker CONTRIBUTION vector
+    ((n_workers,) float, n_workers | global batch).  The discard policy
+    passes the 0/1 bit array; the anytime policy
+    (``core.controller.AnytimeController``) passes completed-microbatch
+    fractions in [0, 1].  The step scans the per-worker microbatches; a
+    worker with contribution f keeps only its first ``round(f *
+    grad_accum)`` microbatch gradients (the ``jax.lax.scan`` grad-accum
+    partial sums — the partial work an anytime straggler actually
+    shipped), normalized by its completed token count, and the stack is
+    aggregated with ``collectives.masked_grad_mean`` weighted by f — an
     explicit combine whose numerics are independent of how many workers
-    were dropped.  Costs n_workers x gradient memory; the production
-    path is "weights".
+    were dropped.  With an all-0/1 vector every multiplication is by
+    exactly 1.0, so the generalized path is bit-identical to the bit-array
+    path.  Costs n_workers x gradient memory; the production path is
+    "weights".
 
-    The two paths are exactly equivalent when the auxiliary loss is zero
-    (dense archs, or aux_coef=0).  For MoE archs they differ on dropped
-    workers' load-balance aux: "psum" is the true PS semantics (a dropped
-    worker contributes nothing, aux included), while "weights" leaves the
-    aux term unweighted over the full batch.
+    stale_reuse=True (mask_agg="psum" only, the
+    ``core.controller.StaleReuseController`` policy): the step also
+    returns the DROPPED workers' mean gradient under ``metrics["stale"]``
+    (a ``(tree, count)`` pair the Trainer buffers), and consumes
+    ``batch["stale_g"]`` / ``batch["stale_w"]`` — last step's dropped
+    mean and its decayed weight — folding them into this step's masked
+    mean in-jit: ``g = (c * g_fresh + w * g_stale) / (c + w)``.  With
+    ``stale_w = 0`` the fold multiplies by exactly 1.0/0.0 and the
+    update matches plain discard bit-for-bit.
+
+    The weights and psum paths are exactly equivalent when the auxiliary
+    loss is zero (dense archs, or aux_coef=0) and the contribution vector
+    is 0/1.  For MoE archs they differ on dropped workers' load-balance
+    aux: "psum" is the true PS semantics (a dropped worker contributes
+    nothing, aux included), while "weights" leaves the aux term
+    unweighted over the full batch.  For FRACTIONAL contributions they
+    differ by design: "psum" aggregates the true partial microbatch sums,
+    "weights" approximates them as f-scaled full-batch gradients (the
+    per-example weight is f for every example of worker w).
     """
     if mask_agg not in MASK_AGG_MODES:
         raise ValueError(f"unknown mask_agg {mask_agg!r} "
                          f"(want one of {MASK_AGG_MODES})")
+    if stale_reuse and mask_agg != "psum":
+        raise ValueError(
+            "stale_reuse needs per-worker gradients: build the step with "
+            "mask_agg='psum' (the weights path never materializes a "
+            "dropped worker's gradient to buffer)")
     loss_fn = make_loss_fn(cfg, aux_coef)
 
     def normalizer_of(batch):
@@ -131,26 +158,47 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
             return jnp.asarray(B * S, jnp.float32)
         return jnp.maximum(jnp.sum(w.astype(jnp.float32)) * S, 1e-6)
 
-    def accum_grads_of(params, batch, norm):
-        """Summed-over-microbatches gradient at a fixed normalizer."""
+    def accum_grads_of(params, batch, norm, mb_w=None):
+        """Summed-over-microbatches gradient at a fixed normalizer.
+
+        ``mb_w`` (optional, (grad_accum,) f32): per-microbatch weights —
+        the anytime partial-sum tap.  Each microbatch's gradient (and its
+        loss/aux share) is scaled by its weight inside the scan, so a 0/1
+        prefix vector yields exactly the straggler's completed partial
+        sum.  ``None`` keeps the dense path byte-identical.
+        """
         if grad_accum == 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch, norm)
+            if mb_w is not None:
+                w0 = mb_w[0]
+                grads = jax.tree.map(lambda g: g * w0.astype(g.dtype),
+                                     grads)
+                loss = loss * w0
+                metrics = {"ce": metrics["ce"] * w0,
+                           "aux": metrics["aux"] * w0}
             return loss, metrics, grads
 
         mb = _split_batch(batch, grad_accum)
 
-        def body(carry, mbatch):
+        def body(carry, xs):
+            mbatch, w = xs if mb_w is not None else (xs, None)
             g_acc, l_acc, a_acc = carry
             (loss, metrics), g = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, mbatch, norm)
+            aux = metrics["aux"]
+            if w is not None:
+                g = jax.tree.map(lambda x: x * w.astype(x.dtype), g)
+                loss = loss * w
+                aux = aux * w
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-            return (g_acc, l_acc + loss, a_acc + metrics["aux"]), None
+            return (g_acc, l_acc + loss, a_acc + aux), None
 
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (grads, loss, aux), _ = jax.lax.scan(
-            body, (g0, jnp.float32(0), jnp.float32(0)), mb)
+            body, (g0, jnp.float32(0), jnp.float32(0)),
+            (mb, mb_w) if mb_w is not None else mb)
         return loss, {"ce": loss, "aux": aux / grad_accum}, grads
 
     def grads_of(params, batch):
@@ -160,37 +208,73 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
         """Per-worker gradients, stacked on a leading worker dim.
 
         Each worker w owns the w-th contiguous slice of the global batch
-        (the ``example_weights`` convention) and normalizes by its OWN
-        token count, so the masked mean over workers equals the weights
-        path's sum/(c*S*per) normalization exactly.
+        (the ``example_weights`` convention).  A worker with contribution
+        f keeps only its first ``round(f * grad_accum)`` microbatch
+        gradients and normalizes by its COMPLETED token count (clamped at
+        one microbatch so a zero-contribution worker's loss stays finite
+        — its weight in the aggregation is 0 anyway), so the f-weighted
+        mean over workers equals the anytime mean over completed
+        microbatches, and a 0/1 vector reproduces the bit-array masked
+        mean bit-for-bit (every scale is exactly 1.0 or 0.0).
         """
-        mask = batch["mask"]
+        mask = jnp.asarray(batch["mask"], jnp.float32)
         W = mask.shape[0]
-        data = {k: v for k, v in batch.items() if k != "mask"}
+        data = {k: v for k, v in batch.items()
+                if k not in ("mask", "stale_g", "stale_w")}
         B, S = data["tokens"].shape
         assert B % W == 0, (B, W)
-        norm = jnp.asarray((B // W) * S, jnp.float32)
+        base_norm = jnp.asarray((B // W) * S, jnp.float32)
         wb = _split_batch(data, W)
 
-        def body(_, mbatch):
-            loss, metrics, g = accum_grads_of(params, mbatch, norm)
+        def body(_, xs):
+            mbatch, f = xs
+            # completed-microbatch prefix: first round(f * G) of G
+            done = jnp.round(f * grad_accum)
+            mb_w = (jnp.arange(grad_accum) < done).astype(jnp.float32)
+            norm = jnp.maximum(f, 1.0 / grad_accum) * base_norm
+            loss, metrics, g = accum_grads_of(params, mbatch, norm,
+                                              mb_w=mb_w)
             return None, (g, loss, metrics["ce"], metrics["aux"])
 
-        _, (grads, losses, ces, auxs) = jax.lax.scan(body, None, wb)
+        _, (grads, losses, ces, auxs) = jax.lax.scan(body, None, (wb, mask))
         return grads, losses, ces, auxs
 
     def psum_grads_of(params, batch):
         mask = jnp.asarray(batch["mask"], jnp.float32)
         grads, losses, ces, auxs = worker_grads_of(params, batch)
-        grads = collectives.masked_grad_mean(grads, mask)
+        agg = collectives.masked_grad_mean(grads, mask)
+        stale = None
+        if stale_reuse:
+            # the dropped workers' mean gradient, buffered by the Trainer
+            # and folded into the NEXT step (Dutta et al.); stale reuse is
+            # a 0/1-mask policy, so 1 - mask is the dropped bit array
+            stale = (collectives.masked_grad_mean(grads, 1.0 - mask),
+                     jnp.sum(1.0 - mask))
         c = jnp.maximum(jnp.sum(mask), 1.0)
         masked_mean = lambda x: jnp.sum(x * mask) / c
         return masked_mean(losses), {"ce": masked_mean(ces),
-                                     "aux": masked_mean(auxs)}, grads
+                                     "aux": masked_mean(auxs)}, agg, stale
 
     def train_step(state, batch):
-        compute = psum_grads_of if mask_agg == "psum" else grads_of
-        loss, metrics, grads = compute(state["params"], batch)
+        if mask_agg == "psum":
+            loss, metrics, grads, stale = psum_grads_of(state["params"],
+                                                        batch)
+            if stale_reuse:
+                # fold last step's dropped-worker mean in with its decayed
+                # weight: g = (c * fresh + w * stale) / (c + w); w == 0
+                # multiplies by exactly 1.0/0.0 => bit-identical discard
+                c = jnp.maximum(
+                    jnp.sum(jnp.asarray(batch["mask"], jnp.float32)), 1.0)
+                w = jnp.asarray(batch["stale_w"], jnp.float32)
+                denom = c + w
+                grads = jax.tree.map(
+                    lambda a, b: (a * (c / denom).astype(a.dtype)
+                                  + b.astype(a.dtype)
+                                  * (w / denom).astype(a.dtype)),
+                    grads, batch["stale_g"])
+        else:
+            loss, metrics, grads = grads_of(state["params"], batch)
+            stale = None
         if compress_pod_grads:
             grads, ef = optim.error_feedback_compress(grads,
                                                       state.get("ef"))
@@ -202,6 +286,8 @@ def make_train_step(cfg, optimizer: optim.Optimizer, *,
             new_state["ef"] = new_ef
         metrics = dict(metrics, loss=loss,
                        gnorm=optim.global_norm(grads))
+        if stale_reuse:
+            metrics["stale"] = stale
         return new_state, metrics
 
     return train_step
@@ -296,10 +382,15 @@ def clock_to_loss(history, target: float, window: int = 3):
     THE wall-clock-to-loss metric for Trainer histories — the acceptance
     tests, benches and demos all share this one implementation (losses
     must already be drained floats, i.e. after ``run()`` returned).
+
+    Only FULL windows are eligible: the first ``window - 1`` steps cannot
+    trigger the target (a partial early window is a mean over fewer
+    losses, so one lucky first step used to fire the target a true
+    trailing mean would not).
     """
     losses = [h["loss"] for h in history]
-    for i in range(len(losses)):
-        if np.mean(losses[max(0, i - window + 1):i + 1]) <= target:
+    for i in range(window - 1, len(losses)):
+        if np.mean(losses[i - window + 1:i + 1]) <= target:
             return history[i]["clock"]
     return None
 
@@ -361,6 +452,8 @@ class Trainer:
     members: Optional[np.ndarray] = None      # global worker ids
     history: list = field(default_factory=list)
     _pending_metrics: list = field(default_factory=list, repr=False)
+    # stale-reuse buffer: last step's (dropped-mean tree, count) device pair
+    _stale: Any = field(default=None, repr=False)
 
     def restore_or_init(self, init_state_fn):
         from repro.checkpoint import store
@@ -496,15 +589,47 @@ class Trainer:
             # than c workers finished and the two views diverge
             finished = mask.astype(bool)
 
+            # anytime policy: stragglers contribute their completed
+            # fraction instead of a zeroed bit; finishers stay exactly 1.0
+            contrib = mask
+            if hasattr(self.controller, "contribution"):
+                contrib = np.asarray(
+                    self.controller.contribution(times, c), np.float32)
+
             batch = dict(self.data.batch(self.step))
             if self.mask_agg == "psum":
-                batch["mask"] = jnp.asarray(mask)
+                batch["mask"] = jnp.asarray(contrib)
             else:
                 batch["weights"] = collectives.example_weights(
-                    mask, batch["tokens"].shape[0])
+                    contrib, batch["tokens"].shape[0])
+            decay = getattr(self.controller, "stale_decay", None)
+            if decay is not None:
+                if self.mask_agg != "psum":
+                    raise ValueError(
+                        "StaleReuseController needs mask_agg='psum' (the "
+                        "weights path never materializes a dropped "
+                        "worker's gradient to buffer)")
+                if self._stale is None:
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        self.state["params"])
+                    self._stale = (zeros, jnp.float32(0))
+                stale_g, stale_d = self._stale
+                batch["stale_g"] = stale_g
+                # decayed weight of the buffered mean: decay per worker
+                # that contributed to it, kept lazy on device (no sync)
+                batch["stale_w"] = jnp.float32(decay) * stale_d
             # dispatch the train step FIRST (async), then run the PS's
             # observe/imputation so controller inference overlaps compute
             self.state, metrics = self.step_fn(self.state, batch)
+            if decay is not None:
+                if "stale" not in metrics:
+                    raise ValueError(
+                        "StaleReuseController needs a step_fn built with "
+                        "make_train_step(..., mask_agg='psum', "
+                        "stale_reuse=True) — this one returned no "
+                        "metrics['stale'] buffer")
+                self._stale = metrics.pop("stale")
             self.controller.observe(times, finished)
             self.step += 1
             self.sim_clock += iter_time

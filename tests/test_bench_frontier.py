@@ -1,0 +1,74 @@
+"""BENCH_frontier.json schema guard.
+
+Runs ``benchmarks.frontier_bench.bench_frontier`` at minimum size and
+asserts the machine-readable output keeps the ``bench_frontier/v1``
+contract.  Schema smoke test only — the seeded full-size race (and the
+anytime/stale-beat-sync claim) is gated by ``scripts/ci.sh --bench``.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+POLICIES = ("sync", "static", "firstk", "dmm", "anytime", "stale")
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    from benchmarks.frontier_bench import bench_frontier
+
+    out = tmp_path_factory.mktemp("bench") / "BENCH_frontier.json"
+    bench_frontier(quick=True, out_path=str(out), steps=8)
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_bench_frontier_schema(bench_json):
+    assert bench_json["schema"] == "bench_frontier/v1"
+    fr = bench_json["frontier"]
+    for key in ("arch", "n_workers", "sync_steps", "clock_budget",
+                "grad_accum", "stale_decay", "sim", "target_loss", "race"):
+        assert key in fr, key
+    assert fr["clock_budget"] > 0
+    race = fr["race"]
+    assert [r["policy"] for r in race] == list(POLICIES)
+    for row in race:
+        for key in ("policy", "clock_to_loss", "final_loss", "steps",
+                    "total_clock", "mean_cutoff", "steps_per_s"):
+            assert key in row, (row["policy"], key)
+        assert row["clock_to_loss"] is None or row["clock_to_loss"] > 0
+        assert row["steps"] > 0 and row["steps_per_s"] > 0
+        assert 1.0 <= row["mean_cutoff"] <= fr["n_workers"]
+    by = {r["policy"]: r for r in race}
+    # sync waits for everyone; the budget race gives cutoff policies at
+    # least as many steps in the same simulated clock
+    assert by["sync"]["mean_cutoff"] == fr["n_workers"]
+    for p in ("static", "firstk", "dmm", "anytime", "stale"):
+        assert by[p]["steps"] >= by["sync"]["steps"], p
+
+
+def test_committed_bench_frontier_matches_schema():
+    """The checked-in BENCH_frontier.json (the frontier datapoint) must
+    exist, carry the schema, and show both non-discard policies beating
+    full sync with the DMM on the frontier (the PR's acceptance race)."""
+    path = Path(__file__).resolve().parent.parent / "BENCH_frontier.json"
+    assert path.exists(), "BENCH_frontier.json not committed"
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema"] == "bench_frontier/v1"
+    race = {r["policy"]: r for r in data["frontier"]["race"]}
+    assert set(race) == set(POLICIES)
+    t = {p: race[p]["clock_to_loss"] for p in POLICIES}
+    assert t["anytime"] is not None and t["stale"] is not None
+    assert t["dmm"] is not None
+    sync_t = t["sync"]
+    assert sync_t is None or t["anytime"] < sync_t
+    assert sync_t is None or t["stale"] < sync_t
+    # the paper's DMM stays on the frontier: it beats every policy that
+    # neither taps partial sums nor reuses stale gradients
+    for p in ("static", "firstk"):
+        assert t[p] is None or t["dmm"] < t[p]
+    assert sync_t is None or t["dmm"] < sync_t

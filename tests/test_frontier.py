@@ -1,0 +1,300 @@
+"""Straggler-policy frontier: anytime partial gradients + stale reuse.
+
+The contract under test (core/README.md policy table):
+
+  * ``AnytimeController.contribution`` generalizes the discard bit array
+    to a per-worker f32 vector — and REDUCES to it bit-for-bit whenever
+    stragglers completed zero microbatches by the cutoff (in particular
+    always at ``n_micro=1``), so a Trainer run through either aggregation
+    path is bit-identical to plain discard in that regime.
+  * fractional contributions aggregate the TRUE partial microbatch sums
+    on the psum path: grads == sum_w f_w * ghat_w / sum_w f_w where
+    ghat_w is worker w's mean gradient over its completed prefix.
+  * ``StaleReuseController`` with ``decay=0`` is exactly the discard
+    policy (the in-jit fold multiplies by 1.0/0.0).
+  * both wrappers satisfy the elastic ``resize(n, col_map, model,
+    members)`` protocol and the checkpoint window protocol by delegation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_cfg
+from repro import optim
+from repro.cluster.simulator import (ClusterSim, microbatch_progress,
+                                     paper_cluster_158)
+from repro.core.controller import (AnytimeController, CutoffController,
+                                   FullSyncController, StaleReuseController,
+                                   StaticCutoffController)
+from repro.core.runtime_model.api import RuntimeModel
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.train import Trainer, jit_train_step, make_train_step
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# Simulator progress query.
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_progress_basic():
+    times = np.array([2.0, 4.0, 8.0])
+    # at t=4 with 4 microbatches: worker0 done (capped at 1), worker1
+    # exactly done, worker2 finished 2 of 4
+    p = microbatch_progress(times, 4.0, 4)
+    np.testing.assert_allclose(p, [1.0, 1.0, 0.5])
+    # exact k/n ratios never floor down to (k-1)/n
+    np.testing.assert_allclose(microbatch_progress(np.array([3.0]), 1.0, 3),
+                               [1.0 / 3.0])
+    # n_micro=1: pure 0/1 — partial work is invisible
+    np.testing.assert_allclose(microbatch_progress(times, 4.0, 1),
+                               [1.0, 1.0, 0.0])
+    with pytest.raises(ValueError):
+        microbatch_progress(times, 4.0, 0)
+
+
+def test_anytime_contribution_vector():
+    ctl = AnytimeController(StaticCutoffController(4, cutoff=2), n_micro=4)
+    times = np.array([1.0, 2.0, 3.0, 8.0])
+    contrib = ctl.contribution(times, 2)
+    # finishers exactly 1.0; stragglers their completed fraction at the
+    # cutoff time (t=2): worker2 did floor(2/3*4)=2 of 4, worker3 1 of 4
+    np.testing.assert_allclose(contrib, [1.0, 1.0, 0.5, 0.25])
+    assert contrib.dtype == np.float32
+
+
+def test_anytime_contribution_reduces_to_bit_array():
+    # n_micro=1 (or stragglers with no completed microbatch): the vector
+    # IS the discard bit array, bit for bit
+    inner = StaticCutoffController(6, cutoff=4)
+    ctl = AnytimeController(inner, n_micro=1)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        times = rng.uniform(1.0, 10.0, size=6)
+        c = 4
+        contrib = ctl.contribution(times, c)
+        order = np.argsort(times, kind="stable")
+        bits = np.zeros(6, np.float32)
+        bits[order[:c]] = 1.0
+        assert np.array_equal(contrib, bits)
+
+
+# ---------------------------------------------------------------------------
+# Train-step math: true partial sums on the psum path.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = reduced_cfg("qwen2-0.5b")
+    opt = optim.adamw(3e-3)
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params)}
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16,
+                           global_batch=8, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    return cfg, opt, state, batch
+
+
+def test_fractional_psum_aggregates_true_partial_sums(tiny_setup):
+    """contribution [1, 1, 1, 0.5] with grad_accum=2: the straggler's
+    term is its FIRST-microbatch gradient (normalized by its completed
+    tokens), weighted 0.5 in the masked mean."""
+    cfg, opt, state, batch = tiny_setup
+
+    # reference: per-worker gradients by hand.  ghat_w = grad of the MEAN
+    # CE over worker w's completed prefix (the step normalizes the partial
+    # sum by its completed token count); the masked mean weights by f.
+    W, G = 4, 2
+    loss_fn = lambda p, b: M.train_loss(cfg, p, b, aux_coef=0.0)[0]
+    B, S = batch["tokens"].shape
+    per = B // W
+    ghats = []
+    for w in range(W):
+        sub = {k: v[w * per:(w + 1) * per] for k, v in batch.items()}
+        if w == 3:
+            # straggler: first of its 2 microbatches only
+            sub = {k: v[:per // G] for k, v in sub.items()}
+        ghats.append(jax.grad(loss_fn)(state["params"], sub))
+    f = np.array([1.0, 1.0, 1.0, 0.5], np.float32)
+    g_ref = jax.tree.map(
+        lambda *g: sum(fi * gi for fi, gi in zip(f, g)) / f.sum(), *ghats)
+
+    # pull the step's aggregated gradient out with a probe "optimizer"
+    # that records the gradient it is handed and applies a zero update
+    b = dict(batch, mask=jnp.asarray(f))
+    recorded = {}
+
+    class Probe:
+        def init(self, params):
+            return {"step": jnp.int32(0)}
+
+        def update(self, grads, opt, params):
+            recorded["g"] = grads
+            return jax.tree.map(jnp.zeros_like, grads), opt
+
+    probe_step = make_train_step(cfg, Probe(), grad_accum=G,
+                                 mask_agg="psum", aux_coef=0.0)
+    probe_state = {"params": state["params"],
+                   "opt": {"step": jnp.int32(0)}}
+    probe_step(probe_state, b)
+    err = max(float(jnp.max(jnp.abs(a - r))) for a, r in
+              zip(jax.tree.leaves(recorded["g"]), jax.tree.leaves(g_ref)))
+    assert err < 1e-5, err
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact reductions through the Trainer, both aggregation paths.
+# ---------------------------------------------------------------------------
+
+
+def _run_trainer(cfg, opt, step_fn, controller, mask_agg, n_steps=4,
+                 grad_accum=1):
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16,
+                           global_batch=8, seed=0)
+    tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=controller,
+                 timer=ClusterSim(n_workers=4, n_nodes=2, seed=5),
+                 n_workers=4, mask_agg=mask_agg, metrics_every=0)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    tr.restore_or_init(init_fn)
+    tr.run(n_steps)
+    return tr
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a["params"]),
+                               jax.tree.leaves(b["params"])))
+
+
+@pytest.mark.parametrize("mode", ["weights", "psum"])
+def test_anytime_n_micro_1_bitwise_equals_discard(mode, tiny_setup):
+    cfg, opt, _, _ = tiny_setup
+    step = jit_train_step(cfg, opt, donate=False, grad_accum=2,
+                          mask_agg=mode)
+    tr_discard = _run_trainer(cfg, opt, step,
+                              StaticCutoffController(4, cutoff=3), mode)
+    tr_any = _run_trainer(
+        cfg, opt, step,
+        AnytimeController(StaticCutoffController(4, cutoff=3), n_micro=1),
+        mode)
+    assert _params_equal(tr_discard.state, tr_any.state)
+    for hd, ha in zip(tr_discard.history, tr_any.history):
+        assert hd["loss"] == ha["loss"]
+
+
+def test_stale_reuse_decay_0_bitwise_equals_discard(tiny_setup):
+    cfg, opt, _, _ = tiny_setup
+    plain = jit_train_step(cfg, opt, donate=False, grad_accum=2,
+                           mask_agg="psum")
+    sr = jit_train_step(cfg, opt, donate=False, grad_accum=2,
+                        mask_agg="psum", stale_reuse=True)
+    tr_discard = _run_trainer(cfg, opt, plain,
+                              StaticCutoffController(4, cutoff=3), "psum")
+    tr_stale = _run_trainer(
+        cfg, opt, sr,
+        StaleReuseController(StaticCutoffController(4, cutoff=3), decay=0.0),
+        "psum")
+    assert _params_equal(tr_discard.state, tr_stale.state)
+
+
+def test_stale_reuse_decay_changes_updates(tiny_setup):
+    cfg, opt, _, _ = tiny_setup
+    sr = jit_train_step(cfg, opt, donate=False, grad_accum=2,
+                        mask_agg="psum", stale_reuse=True)
+    tr0 = _run_trainer(
+        cfg, opt, sr,
+        StaleReuseController(StaticCutoffController(4, cutoff=3), decay=0.0),
+        "psum")
+    tr5 = _run_trainer(
+        cfg, opt, sr,
+        StaleReuseController(StaticCutoffController(4, cutoff=3), decay=0.5),
+        "psum")
+    assert not _params_equal(tr0.state, tr5.state)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails.
+# ---------------------------------------------------------------------------
+
+
+def test_stale_reuse_needs_psum(tiny_setup):
+    cfg, opt, _, _ = tiny_setup
+    with pytest.raises(ValueError, match="psum"):
+        make_train_step(cfg, opt, mask_agg="weights", stale_reuse=True)
+
+
+def test_stale_controller_rejects_weights_trainer(tiny_setup):
+    cfg, opt, _, _ = tiny_setup
+    step = jit_train_step(cfg, opt, donate=False, mask_agg="weights")
+    with pytest.raises(ValueError, match="psum"):
+        _run_trainer(
+            cfg, opt, step,
+            StaleReuseController(StaticCutoffController(4, cutoff=3)),
+            "weights", n_steps=1)
+
+
+def test_stale_controller_rejects_plain_step(tiny_setup):
+    cfg, opt, _, _ = tiny_setup
+    step = jit_train_step(cfg, opt, donate=False, mask_agg="psum")
+    with pytest.raises(ValueError, match="stale_reuse=True"):
+        _run_trainer(
+            cfg, opt, step,
+            StaleReuseController(StaticCutoffController(4, cutoff=3)),
+            "psum", n_steps=1)
+
+
+def test_policy_wrapper_validation():
+    with pytest.raises(ValueError):
+        AnytimeController(FullSyncController(4), n_micro=0)
+    with pytest.raises(ValueError):
+        StaleReuseController(FullSyncController(4), decay=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Elastic + checkpoint protocol by delegation.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wrap", [
+    lambda inner: AnytimeController(inner, n_micro=4),
+    lambda inner: StaleReuseController(inner, decay=0.5),
+])
+def test_policy_wrappers_satisfy_resize_protocol(wrap):
+    # static inner: width-only resize
+    ctl = wrap(StaticCutoffController(8, cutoff=6))
+    assert ctl.n == 8
+    ctl.resize(4, col_map=None, model=None, members=np.arange(4))
+    assert ctl.n == 4
+    assert 1 <= ctl.predict_cutoff() <= 4
+
+    # DMM inner: the lag window must remap column-exactly through the
+    # wrapper, same as the bare controller
+    trace = paper_cluster_158(0, n_workers=8).run(60)
+    rm = RuntimeModel(n_workers=8, lag=6).init(0)
+    rm.fit(trace, steps=60, batch=8, seed=0)
+    rm4 = RuntimeModel(n_workers=4, lag=6).init(1)
+    rm4.norm_scale = rm.norm_scale
+    bare = CutoffController(rm, k_samples=16, seed=0)
+    bare.seed_window(trace)
+    wrapped = wrap(CutoffController(rm, k_samples=16, seed=0))
+    wrapped.seed_window(trace)
+    col_map = np.array([0, 2, 4, 6])
+    bare.resize(4, col_map=col_map, model=rm4)
+    wrapped.resize(4, col_map=col_map, model=rm4, members=np.arange(4))
+    np.testing.assert_array_equal(bare.window_array(),
+                                  wrapped.window_array())
+    assert wrapped.predict_cutoff() == bare.predict_cutoff()
+
+
+def test_policy_wrapper_window_protocol():
+    # inner without a window: the checkpoint path's ValueError contract
+    ctl = AnytimeController(StaticCutoffController(4, cutoff=3))
+    with pytest.raises(ValueError):
+        ctl.window_array()
+    ctl.seed_window(np.ones((3, 4)))      # no-op, must not raise

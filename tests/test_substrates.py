@@ -95,6 +95,25 @@ def test_tokens_deterministic_and_with_replacement():
     assert not np.array_equal(w0["tokens"], w1["tokens"])
 
 
+def test_tokens_worker_draws_cover_global_batch():
+    # divisible: per-worker draws tile the full global batch exactly
+    ds = SyntheticTokens(vocab_size=128, seq_len=16, global_batch=8, seed=0)
+    total = sum(ds.batch(0, worker=w, n_workers=4)["tokens"].shape[0]
+                for w in range(4))
+    assert total == ds.global_batch
+    assert ds.batch(0)["tokens"].shape[0] == ds.global_batch
+
+
+def test_tokens_nondivisible_worker_count_raises():
+    # non-divisible worker counts used to silently truncate (3 workers x
+    # 10//3 = 9 of 10 examples); now they fail loudly like the Trainer
+    ds = SyntheticTokens(vocab_size=128, seq_len=16, global_batch=10, seed=0)
+    with pytest.raises(ValueError, match="not divisible"):
+        ds.batch(0, worker=0, n_workers=3)
+    # the full-batch path is unaffected
+    assert ds.batch(0)["tokens"].shape[0] == 10
+
+
 def test_tokens_learnable_structure():
     ds = SyntheticTokens(vocab_size=64, seq_len=32, global_batch=16, seed=0)
     b = ds.batch(0)
@@ -138,6 +157,24 @@ def test_checkpoint_keep_n_and_atomic(tmp_path):
     kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
     assert kept == ["step_0000000003", "step_0000000004"]
     assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_resave_same_step(tmp_path):
+    # warm-restart pattern: save step 7, restore, save step 7 AGAIN —
+    # publish must replace the old dir atomically instead of crashing on
+    # os.rename into an existing directory (or leaving a window with no
+    # step_7 at all)
+    d = str(tmp_path)
+    store.save(d, 7, {"x": {"v": jnp.zeros(3)}})
+    restored = store.restore(d, {"x": {"v": jnp.zeros(3)}})
+    np.testing.assert_array_equal(restored["x"]["v"], jnp.zeros(3))
+    store.save(d, 7, {"x": {"v": jnp.arange(3.0)}})   # re-save same step
+    out = store.restore(d, {"x": {"v": jnp.zeros(3)}})
+    np.testing.assert_array_equal(out["x"]["v"], jnp.arange(3.0))
+    assert store.latest_step(d) == 7
+    leftovers = [f for f in os.listdir(d)
+                 if f.startswith(("tmp.", "stale."))]
+    assert leftovers == []
 
 
 def test_async_checkpointer(tmp_path):
