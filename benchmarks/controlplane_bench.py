@@ -1,0 +1,199 @@
+"""Control-plane drill bench: detection latency, recovery, steps lost.
+
+Two sections, both seeded and deterministic:
+
+  * ``detection`` — a :meth:`FaultPlan.storm` of crashes and hangs over
+    a 16-worker sim pool, supervisor ticking every step.  Measures the
+    per-tick supervisor overhead and the detection-latency distribution;
+    the CI gate pins ``max_detection_ticks <= dead_after + 1`` (the
+    heartbeat determinism contract — a deadline miss is detected the
+    tick after it expires, never later).
+
+  * ``recovery`` — the full supervised trainer drill
+    (``launch.supervised.run_supervised``: crash + hang + flaky restart
+    + slowdown) raced against (a) an UNSUPERVISED baseline suffering the
+    same faults with nobody restarting the fallen workers and (b) a
+    fault-free run of the same trainer.  Reports worker-steps lost
+    (sum over steps of ``n_full - healthy``), the throughput retained
+    vs fault-free, and the scripted-replay equivalence bit.  The CI
+    gate pins supervised steps-lost strictly below the unsupervised
+    baseline and the replay ``match``.
+
+Output: CSV rows + ``BENCH_controlplane.json`` (schema
+``bench_controlplane/v1``), consumed by ``scripts/ci.sh --bench`` and
+guarded by ``tests/test_bench_controlplane.py``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+DEAD_AFTER = 4
+SUSPECT_AFTER = 2
+
+
+def _storm_detection(n_workers: int = 16, n_faults: int = 6,
+                     horizon: int = 40, seed: int = 0) -> dict:
+    from repro.cluster.simulator import OverlaySim, paper_cluster_158
+    from repro.controlplane import (FaultInjector, FaultPlan,
+                                    SimWorkerPool, Supervisor,
+                                    drill_report)
+
+    overlay = OverlaySim(paper_cluster_158(seed + 1, n_workers=n_workers))
+    plan = FaultPlan.storm(n_workers, n_faults, horizon, seed=seed,
+                           kinds=("crash", "hang"))
+    pool = SimWorkerPool(overlay, FaultInjector(plan, seed=seed))
+    sup = Supervisor(pool, suspect_after=SUSPECT_AFTER,
+                     dead_after=DEAD_AFTER, seed=seed)
+    ticks = plan.horizon + 30            # room for every restart to land
+    t0 = time.perf_counter()
+    for t in range(1, ticks + 1):
+        sup.tick(t)
+    us_per_tick = (time.perf_counter() - t0) / ticks * 1e6
+    rep = drill_report(sup.log.events)
+    emit("controlplane/supervisor_tick", us_per_tick,
+         f"n={n_workers};faults={rep['n_faults']}")
+    emit("controlplane/detection_latency", 0.0,
+         f"max={rep['max_detection_ticks']};"
+         f"mean={rep['mean_detection_ticks']:.2f};"
+         f"deadline={DEAD_AFTER}")
+    return {"n_workers": n_workers, "ticks": ticks,
+            "dead_after": DEAD_AFTER, "suspect_after": SUSPECT_AFTER,
+            "n_faults": rep["n_faults"], "n_detected": rep["n_detected"],
+            "max_detection_ticks": rep["max_detection_ticks"],
+            "mean_detection_ticks": rep["mean_detection_ticks"],
+            "restarts": rep["restarts"], "evicted": rep["evicted"],
+            "us_per_tick": us_per_tick}
+
+
+class _UnsupervisedTimer:
+    """The same faults, nobody watching: full-width timer whose fallen
+    workers stall forever (no detection, no restarts)."""
+
+    def __init__(self, overlay, pool, monitor, log):
+        self.overlay, self.pool = overlay, pool
+        self.monitor, self.log = monitor, log
+        self.healthy = []
+
+    @property
+    def n_workers(self) -> int:
+        return self.overlay.n_workers
+
+    @property
+    def active_ids(self):
+        return np.arange(self.overlay.n_workers)
+
+    @property
+    def t(self) -> int:
+        return self.overlay.t
+
+    def step(self):
+        self.pool.pump(self.overlay.t, self.monitor, self.log)
+        self.healthy.append(self.pool.healthy_count(self.active_ids))
+        return self.overlay.step()
+
+
+def _recovery_race(steps: int = 60, seed: int = 0,
+                   n_workers: int = 6) -> dict:
+    import jax
+
+    from repro import optim
+    from repro.cluster.simulator import OverlaySim, paper_cluster_158
+    from repro.configs.base import bench_tiny_config
+    from repro.controlplane import (EventLog, FaultInjector,
+                                    HeartbeatMonitor, SimWorkerPool)
+    from repro.core.controller import ElfvingController
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.supervised import default_plan, run_supervised
+    from repro.launch.train import Trainer, jit_train_step
+
+    sup_out = run_supervised(steps=steps, seed=seed, n_workers=n_workers,
+                             verbose=False)
+    rep = sup_out["report"]
+    sup_lost = int(sum(n_workers - h["n"] for h in sup_out["history"]))
+    sup_clock = float(sup_out["history"][-1]["clock"])
+
+    cfg = bench_tiny_config()
+    opt = optim.adamw(3e-3)
+    step_fn = jit_train_step(cfg, opt)
+
+    def init_fn():
+        from repro.models import model as M
+        params = M.init_model(cfg, jax.random.PRNGKey(seed))
+        return {"params": params, "opt": opt.init(params)}
+
+    def run_with(timer):
+        data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                               global_batch=60, seed=seed)
+        tr = Trainer(cfg=cfg, step_fn=step_fn, data=data,
+                     controller=ElfvingController(n_workers),
+                     timer=timer, n_workers=timer.n_workers)
+        tr.restore_or_init(init_fn).run(steps)
+        return tr
+
+    # (a) unsupervised: identical storm, the fallen never come back
+    overlay = OverlaySim(paper_cluster_158(seed + 1, n_workers=n_workers))
+    pool = SimWorkerPool(overlay,
+                         FaultInjector(default_plan(n_workers), seed=seed))
+    base_timer = _UnsupervisedTimer(
+        overlay, pool, HeartbeatMonitor(pool.worker_ids()), EventLog())
+    run_with(base_timer)
+    base_lost = int(sum(n_workers - h for h in base_timer.healthy))
+
+    # (b) fault-free: the throughput the storm is measured against
+    ff = run_with(paper_cluster_158(seed + 1, n_workers=n_workers))
+    ff_clock = float(ff.history[-1]["clock"])
+
+    # A step whose iter time includes a not-yet-detected stalled worker
+    # pays the sim's STALL timeout — that's the detection window's cost,
+    # counted separately so the steady-state throughput ratio stays
+    # meaningful.
+    sup_its = np.diff([0.0] + [h["clock"] for h in sup_out["history"]])
+    ff_its = np.diff([0.0] + [h["clock"] for h in ff.history])
+    timeout = 1e6
+    n_timeout_steps = int(np.sum(sup_its >= timeout))
+    sup_mean_it = float(np.mean(sup_its[sup_its < timeout]))
+    retained = float(np.mean(ff_its)) / sup_mean_it
+
+    emit("controlplane/steps_lost", 0.0,
+         f"supervised={sup_lost};unsupervised={base_lost}")
+    emit("controlplane/throughput_retained", 0.0,
+         f"{retained:.3f};timeout_steps={n_timeout_steps};"
+         f"ff_clock={ff_clock:.1f}")
+    emit("controlplane/scripted_replay_match", 0.0,
+         str(sup_out["match"]))
+    return {"n_workers": n_workers, "steps": steps,
+            "n_faults": rep["n_faults"], "n_detected": rep["n_detected"],
+            "max_detection_ticks": rep["max_detection_ticks"],
+            "mean_recovery_ticks": rep["mean_recovery_ticks"],
+            "restarts": rep["restarts"],
+            "failed_restarts": rep["failed_restarts"],
+            "evicted": rep["evicted"],
+            "widths_seen": sorted({int(h["n"])
+                                   for h in sup_out["history"]}),
+            "steps_lost": {"supervised": sup_lost,
+                           "unsupervised": base_lost},
+            "clock": {"supervised": sup_clock, "fault_free": ff_clock},
+            "timeout_steps": n_timeout_steps,
+            "throughput_retained": retained,
+            "scripted_replay_match": bool(sup_out["match"])}
+
+
+def bench_controlplane(quick: bool = False,
+                       out_path: str = "BENCH_controlplane.json"):
+    results = {
+        "schema": "bench_controlplane/v1",
+        "quick": quick,
+        "detection": _storm_detection(
+            n_faults=4 if quick else 6, horizon=30 if quick else 40),
+        "recovery": _recovery_race(steps=40 if quick else 60),
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("controlplane/json_written", 0.0, out_path)
+    return results

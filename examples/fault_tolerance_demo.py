@@ -11,6 +11,11 @@ elastic resize.
    window is remapped (survivors column-exact), the checkpoint records the
    degraded membership, and the restored run resumes at the checkpoint's
    worker count.
+5. Real DETECTION: phases 3-4 were told who died.  Here a
+   ``controlplane.Supervisor`` finds out from missed heartbeats — a
+   seeded crash + hang storm is detected within the deadline, the
+   membership shrinks, restarts bring the workers back, and the trainer
+   rides the detected schedule end to end.
 
   PYTHONPATH=src python examples/fault_tolerance_demo.py
 """
@@ -107,6 +112,34 @@ def main():
     print(f"restart from the latest checkpoint: step {tr5.step}, "
           f"n_workers {tr5.n_workers}")
     tr5.run(5, verbose=True)
+
+    print("\n=== phase 5: detected (not scripted) failures, supervised ===")
+    from repro.controlplane import drill_report
+    from repro.launch.supervised import (build_supervised, default_plan,
+                                         run_supervised_trainer)
+    shutil.rmtree(CKPT, ignore_errors=True)
+    overlay, sup, timer = build_supervised(8, default_plan(8), seed=4)
+    # every transient width (8 full, 7 during a detection window) must
+    # divide the global batch
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
+                           global_batch=56, seed=0)
+    opt = optim.adamw(3e-3)
+    tr6 = Trainer(cfg=cfg, step_fn=jit_train_step(cfg, opt), data=data,
+                  controller=ElfvingController(8, warmup=3), timer=timer,
+                  n_workers=8)
+    tr6.restore_or_init(lambda: {
+        "params": (p := M.init_model(cfg, jax.random.PRNGKey(0))),
+        "opt": opt.init(p)})
+    run_supervised_trainer(tr6, sup, 36)
+    rep = drill_report(sup.log.events)
+    for i in rep["incidents"]:
+        print(f"  {i['kind']} on worker {i['worker']} at tick "
+              f"{i['fault_tick']}: detected +{i['detection_ticks']} "
+              f"ticks, rejoined at {i['rejoin_tick']}")
+    widths6 = sorted({h["n"] for h in tr6.history})
+    print(f"widths ridden off detection alone: {widths6}")
+    assert rep["n_detected"] == 2 and rep["max_detection_ticks"] <= 5
+    assert widths6 == [7, 8] and tr6.history[-1]["n"] == 8
     print("\nall phases OK")
 
 

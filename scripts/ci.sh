@@ -8,7 +8,11 @@
 #                            #              BENCH_controller.json +
 #                            #              BENCH_elastic.json +
 #                            #              BENCH_ps.json +
-#                            #              BENCH_frontier.json
+#                            #              BENCH_frontier.json +
+#                            #              BENCH_controlplane.json
+#   scripts/ci.sh --drill    # live fault drills: subprocess kill -9 /
+#                            # hang / flaky restart + the supervised
+#                            # trainer storm with scripted-replay check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -33,6 +37,36 @@ for r in bad:
           f"speedup={r['speedup']:.3f}x (< 1.0)", file=sys.stderr)
 sys.exit(1 if bad else 0)
 EOF
+    python -m benchmarks.run --quick --only controlplane "$@"
+    # gates: (a) detection latency never exceeds the heartbeat deadline
+    # + 1 tick (the state machine's determinism contract); (b) the
+    # supervisor's restarts keep worker-steps lost strictly below the
+    # same storm with nobody watching; (c) the detected schedule stays
+    # loss-equivalent to its scripted replay
+    python - <<'EOF'
+import json, sys
+d = json.load(open("BENCH_controlplane.json"))
+det, rec = d["detection"], d["recovery"]
+bad = []
+if det["max_detection_ticks"] > det["dead_after"] + 1:
+    bad.append(f"detection latency {det['max_detection_ticks']} ticks "
+               f"> deadline {det['dead_after']} + 1")
+if det["n_detected"] != det["n_faults"]:
+    bad.append(f"only {det['n_detected']}/{det['n_faults']} faults detected")
+lost = rec["steps_lost"]
+if not lost["supervised"] < lost["unsupervised"]:
+    bad.append(f"steps lost supervised={lost['supervised']} not below "
+               f"unsupervised={lost['unsupervised']}")
+if not rec["scripted_replay_match"]:
+    bad.append("supervised run diverged from its scripted replay")
+for b in bad:
+    print(f"controlplane REGRESSION: {b}", file=sys.stderr)
+if not bad:
+    print(f"controlplane gate ok: detection <= {det['dead_after'] + 1} "
+          f"ticks, steps lost {lost['supervised']} vs "
+          f"{lost['unsupervised']} unsupervised", file=sys.stderr)
+sys.exit(1 if bad else 0)
+EOF
     python -m benchmarks.run --quick --only frontier "$@"
     # gate: at least one non-discard straggler policy (anytime partial
     # sums or stale reuse) must beat full sync on wall-clock-to-loss in
@@ -51,6 +85,17 @@ if not winners:
     sys.exit(1)
 print(f"frontier gate ok: {', '.join(winners)} beat sync", file=sys.stderr)
 EOF
+    exit 0
+fi
+
+if [[ "${1:-}" == "--drill" ]]; then
+    shift
+    # live subprocess drill: real kill -9, a real hang, a flaky restart,
+    # warm ctl-checkpoint recovery by global worker id
+    python tests/sharded/controlplane_drill_check.py "$@"
+    # supervised trainer under the seeded storm; exits non-zero unless
+    # the detected schedule matches its scripted replay loss-for-loss
+    python -m repro.launch.supervised --steps 60
     exit 0
 fi
 

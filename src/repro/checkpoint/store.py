@@ -16,6 +16,23 @@ Properties needed at 1000+ node scale, implemented here:
 
 Format: a directory per step holding one .npz per top-level group plus a
 msgpack manifest of the pytree structure.
+
+Crash-window recovery: the publish sequence for re-saving an existing
+step is ``rename(final, stale)`` then ``rename(tmp, final)`` then
+``rmtree(stale)``.  A crash between the two renames leaves NO
+``step_<step>`` dir — only a complete ``tmp.<step>`` and the old
+``stale.<step>``.  :func:`recover` (run on every open: ``save`` /
+``latest_step`` / ``restore`` / ``restore_group``) repairs every such
+window: a COMPLETE tmp (manifest present) is promoted to final, else the
+stale dir is renamed back; debris is only deleted once a final dir for
+that step exists.  Single writer assumed (the ``AsyncCheckpointer``
+serializes saves; recovery runs on open, before any writer).
+
+Integrity: the manifest records a CRC-32 per group file.  ``restore`` /
+``restore_group`` verify before deserializing and raise
+:class:`CheckpointError` naming the bad group; ``latest_valid_step``
+walks steps newest-first to the first fully-verifying one, which is how
+supervisor recovery falls back past a corrupted latest step.
 """
 from __future__ import annotations
 
@@ -23,12 +40,17 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed validation (corrupt, truncated, or missing)."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -45,6 +67,62 @@ def _treedef_of(tree):
     return jax.tree_util.tree_structure(tree)
 
 
+def _crc32_of(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc
+            crc = zlib.crc32(chunk, crc)
+
+
+def _tmp_complete(tmp: str) -> bool:
+    """A tmp dir is complete iff its manifest exists — the manifest is
+    written LAST, so its presence certifies every group file landed."""
+    return os.path.exists(os.path.join(tmp, "manifest.json"))
+
+
+def recover(ckpt_dir: str):
+    """Repair the publish crash windows; idempotent, run on every open.
+
+    For each step with leftover ``tmp.<step>`` / ``stale.<step>`` dirs:
+
+      * ``step_<step>`` exists -> the publish completed; tmp/stale are
+        debris from before/after the renames — delete them;
+      * no final, COMPLETE tmp -> the crash hit between
+        ``rename(final, stale)`` and ``rename(tmp, final)`` (or just
+        before the first rename on a fresh step): finish the publish —
+        promote tmp to final, then drop the stale copy;
+      * no final, incomplete tmp, stale present -> the save died
+        mid-write after parking the old dir: put the old checkpoint
+        back (``rename(stale, final)``) and drop the partial tmp;
+      * incomplete tmp alone -> a fresh-step save died mid-write; the
+        previous step is still the latest — just drop the partial tmp.
+
+    Without this, the NEXT save of the same step would delete both dirs
+    as debris and the step (sometimes the only copy) would be lost.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = set()
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("tmp.") or d.startswith("stale."):
+            steps.add(int(d.split(".", 1)[1]))
+    for step in sorted(steps):
+        tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+        stale = os.path.join(ckpt_dir, f"stale.{step}")
+        final = os.path.join(ckpt_dir, f"step_{step:010d}")
+        if not os.path.exists(final):
+            if _tmp_complete(tmp):
+                os.rename(tmp, final)
+            elif os.path.exists(stale):
+                os.rename(stale, final)
+        for leftover in (tmp, stale):
+            if os.path.exists(leftover):
+                shutil.rmtree(leftover)
+
+
 def save(ckpt_dir: str, step: int, state: Dict[str, Any],
          keep: int = 3) -> str:
     """Synchronous atomic save.  state: dict of pytrees / plain values.
@@ -54,24 +132,25 @@ def save(ckpt_dir: str, step: int, state: Dict[str, Any],
     renamed aside to ``stale.<step>`` and only removed after the new dir
     is published, so there is no instant at which ``step_<step>`` is
     missing or partial — a crash anywhere leaves either the old or the
-    new checkpoint fully in place.
+    new checkpoint fully in place (:func:`recover` finishes interrupted
+    publishes before this save touches anything).
     """
     os.makedirs(ckpt_dir, exist_ok=True)
+    recover(ckpt_dir)            # promote, don't delete, crashed publishes
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     stale = os.path.join(ckpt_dir, f"stale.{step}")
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
-    for leftover in (tmp, stale):    # debris from an earlier crash
-        if os.path.exists(leftover):
-            shutil.rmtree(leftover)
 
     os.makedirs(tmp)
     manifest = {"step": step, "groups": {}}
     for name, tree in state.items():
         flat = _flatten(tree)
-        np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+        path = os.path.join(tmp, f"{name}.npz")
+        np.savez(path, **flat)
         manifest["groups"][name] = {
             "treedef": str(_treedef_of(tree)),
             "keys": sorted(flat.keys()),
+            "crc32": _crc32_of(path),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -91,11 +170,75 @@ def _gc(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def list_steps(ckpt_dir: str) -> List[int]:
+    """All published steps, ascending (after crash-window recovery)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
-    return int(steps[-1].split("_")[1]) if steps else None
+        return []
+    recover(ckpt_dir)
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_"))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _read_manifest(ckpt_dir: str, step: int) -> dict:
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError(
+            f"checkpoint step {step} in {ckpt_dir} has no manifest "
+            f"(truncated save?)") from None
+    except json.JSONDecodeError as e:
+        raise CheckpointError(
+            f"checkpoint step {step} in {ckpt_dir}: manifest is not valid "
+            f"JSON ({e})") from None
+
+
+def _verify_group(ckpt_dir: str, step: int, name: str, manifest: dict):
+    """Checksum one group file against the manifest; raises
+    :class:`CheckpointError` NAMING the bad group on any mismatch.
+    Manifests from before checksums existed (no ``crc32`` field) pass."""
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    path = os.path.join(d, f"{name}.npz")
+    if not os.path.exists(path):
+        raise CheckpointError(
+            f"checkpoint step {step} group {name!r}: file missing "
+            f"({path})")
+    want = manifest.get("groups", {}).get(name, {}).get("crc32")
+    if want is None:
+        return
+    got = _crc32_of(path)
+    if got != want:
+        raise CheckpointError(
+            f"checkpoint step {step} group {name!r} is corrupt: "
+            f"crc32 {got:#010x} != manifest {want:#010x} ({path})")
+
+
+def verify_step(ckpt_dir: str, step: int):
+    """Validate every group of one step; raises CheckpointError."""
+    manifest = _read_manifest(ckpt_dir, step)
+    for name in sorted(manifest.get("groups", {})):
+        _verify_group(ckpt_dir, step, name, manifest)
+
+
+def latest_valid_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose every group verifies — the recovery anchor.
+
+    Walks newest-first past corrupt/truncated steps, so a supervisor
+    warm-restarting after a torn or bit-flipped latest checkpoint lands
+    on the most recent GOOD one instead of dying."""
+    for step in reversed(list_steps(ckpt_dir)):
+        try:
+            verify_step(ckpt_dir, step)
+            return step
+        except CheckpointError:
+            continue
+    return None
 
 
 def restore_group(ckpt_dir: str, name: str,
@@ -107,6 +250,8 @@ def restore_group(ckpt_dir: str, name: str,
     example tree.  The Trainer's controller window/membership group
     (``"ctl"``) uses this: checkpoints written before the group existed
     simply lack the file, and restore degrades to a cold controller.
+    Present-but-corrupt groups raise :class:`CheckpointError` instead of
+    silently seeding the controller with garbage.
     """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
@@ -114,6 +259,7 @@ def restore_group(ckpt_dir: str, name: str,
     path = os.path.join(ckpt_dir, f"step_{step:010d}", f"{name}.npz")
     if not os.path.exists(path):
         return None
+    _verify_group(ckpt_dir, step, name, _read_manifest(ckpt_dir, step))
     with np.load(path) as z:
         return {k: z[k] for k in z.files}
 
@@ -127,14 +273,22 @@ def restore(ckpt_dir: str, example_state: Dict[str, Any],
     possibly-resized mesh) — arrays are device_put accordingly (elastic
     restart path).
     """
+    recover(ckpt_dir)
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    manifest = _read_manifest(ckpt_dir, step)
     out = {}
     for name, tree in example_state.items():
-        with np.load(os.path.join(d, f"{name}.npz")) as z:
-            flat = {k: z[k] for k in z.files}
+        _verify_group(ckpt_dir, step, name, manifest)
+        try:
+            with np.load(os.path.join(d, f"{name}.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise CheckpointError(
+                f"checkpoint step {step} group {name!r} failed to "
+                f"deserialize: {e}") from e
         leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
         new_leaves = []
         for path, leaf in leaves_with_paths:

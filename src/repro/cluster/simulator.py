@@ -120,6 +120,55 @@ def microbatch_progress(times, t: float, n_micro: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Fault overlay: mutable per-worker stalls/slowdowns on any runtime source.
+# ---------------------------------------------------------------------------
+
+
+class OverlaySim:
+    """Mutable fault overlay on a full-width runtime source.
+
+    The control plane's live twin of the scripted :class:`ChurnSim`: a
+    supervisor (or a drill script) toggles per-worker ``stall`` flags
+    (crashed/hung workers never finish — their runtime becomes
+    :data:`STALL` seconds) and ``slow`` multipliers mid-run, while the
+    base simulator keeps generating the full-width joint phenomenology.
+    Untouched columns are bit-identical to the base run, so a detected
+    fault schedule can be replayed as a scripted one column-exactly.
+    """
+
+    STALL = 1e9
+
+    def __init__(self, base):
+        self.base = base
+        n = base.n_workers
+        self.mult = np.ones(n)
+        self.stalled = np.zeros(n, bool)
+
+    @property
+    def n_workers(self) -> int:
+        return self.base.n_workers
+
+    @property
+    def t(self) -> int:
+        return self.base.t
+
+    def stall(self, wid: int, on: bool = True):
+        self.stalled[int(wid)] = bool(on)
+
+    def slow(self, wid: int, factor: float = 1.0):
+        if factor <= 0:
+            raise ValueError(f"slowdown factor must be > 0, got {factor}")
+        self.mult[int(wid)] = float(factor)
+
+    def step(self) -> np.ndarray:
+        row = np.asarray(self.base.step(), np.float64) * self.mult
+        return np.where(self.stalled, self.STALL, row)
+
+    def run(self, n_steps: int) -> np.ndarray:
+        return np.stack([self.step() for _ in range(n_steps)])
+
+
+# ---------------------------------------------------------------------------
 # Churn layer: elastic worker membership on top of any runtime source.
 # ---------------------------------------------------------------------------
 

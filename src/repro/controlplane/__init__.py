@@ -1,0 +1,46 @@
+"""Control plane: supervision that turns simulated elasticity into
+detected, recovered reality.
+
+The training stack below this package (Trainer / ElasticController /
+PSServer) already survives membership changes — but everything that
+*drives* a membership change is a pre-scripted ``ChurnSim`` schedule.
+This package adds the production layer the shifu ``ssgd_monitor``
+exemplar sketches: a chief that detects worker failure from missed
+heartbeats and recovers from checkpoints, instead of being told.
+
+  * :mod:`repro.controlplane.events`    — structured JSONL event stream
+    (heartbeats, suspicions, membership, restarts, recoveries) with a
+    tailing reader;
+  * :mod:`repro.controlplane.heartbeat` — deadline-driven per-worker
+    ``alive -> suspect -> dead`` state machine (with rejoin);
+  * :mod:`repro.controlplane.faults`    — seeded, composable fault plans
+    (crash / hang / slowdown / checkpoint corruption / flaky restart)
+    so every drill is reproducible;
+  * :mod:`repro.controlplane.supervisor` — the chief: launches workers
+    (threads for tier-1 speed, subprocesses for the real drill), watches
+    heartbeats, kills hung workers, restarts crashed ones with capped
+    exponential backoff + jitter, evicts flapping ones, and feeds the
+    resulting membership into the UNCHANGED elastic training paths;
+  * :mod:`repro.controlplane.worker`    — the subprocess worker payload
+    (heartbeat emitter + warm ``"ctl"``-checkpoint recovery by global
+    worker id).
+
+``src/repro/controlplane/README.md`` holds the full contract
+(state-machine table, restart policy, event schema).
+"""
+from repro.controlplane.events import (Event, EventLog, read_events,
+                                       tail_events)
+from repro.controlplane.faults import Fault, FaultInjector, FaultPlan
+from repro.controlplane.heartbeat import (ALIVE, DEAD, SUSPECT,
+                                          HeartbeatMonitor)
+from repro.controlplane.supervisor import (ProcWorkerPool, SimWorkerPool,
+                                           SupervisedTimer, Supervisor,
+                                           drill_report)
+
+__all__ = [
+    "Event", "EventLog", "read_events", "tail_events",
+    "Fault", "FaultPlan", "FaultInjector",
+    "ALIVE", "SUSPECT", "DEAD", "HeartbeatMonitor",
+    "Supervisor", "SimWorkerPool", "ProcWorkerPool", "SupervisedTimer",
+    "drill_report",
+]

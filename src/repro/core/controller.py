@@ -785,21 +785,38 @@ class CutoffController:
 # ---------------------------------------------------------------------------
 
 
+class RefitError(RuntimeError):
+    """An async DMM refit raised, and the retry budget is spent.
+
+    Raised from the POLL (``predict_cutoff`` / ``observe``), not lost on
+    the worker thread: the owner keeps serving decisions through its
+    fallback while one seeded retry is in flight, and only escalates
+    when the retry fails too — a silently-dead refit would pin the
+    controller on the fallback forever and nobody would know why.
+    """
+
+
 def _spawn_refit(fit_fn, gen: int) -> tuple:
     """Start a DMM refit on a daemon thread.
 
     Returns the ``(thread, result_box, generation)`` refit-task triple
     shared by :class:`ElasticController` and the multi-tenant
     ``ps.PSServer``: the thread fills ``result_box["model"]`` when the
-    ELBO fit finishes, and the generation tag (the owner's resize count
-    at spawn time) lets :func:`_poll_refit_task` discard results that a
-    later resize made stale.  Dropping the triple abandons the fit
-    without ever blocking a decision tick on ``model.fit``.
+    ELBO fit finishes — or ``result_box["error"]`` when it RAISES (the
+    exception is captured, never swallowed; :func:`_poll_refit_task`
+    hands it back to the owner's poll) — and the generation tag (the
+    owner's resize count at spawn time) lets :func:`_poll_refit_task`
+    discard results that a later resize made stale.  Dropping the triple
+    abandons the fit without ever blocking a decision tick on
+    ``model.fit``.
     """
     box: dict = {}
 
     def work():
-        box["model"] = fit_fn()
+        try:
+            box["model"] = fit_fn()
+        except BaseException as e:         # surfaced by the poll
+            box["error"] = e
 
     thread = threading.Thread(target=work, daemon=True)
     task = (thread, box, gen)
@@ -810,20 +827,27 @@ def _spawn_refit(fit_fn, gen: int) -> tuple:
 def _poll_refit_task(task: tuple, gen: int, width: int):
     """Non-blocking poll of a :func:`_spawn_refit` triple.
 
-    Returns ``(done, model)``: ``(False, None)`` while the fit thread is
-    still running; ``(True, model)`` once it finished AND the result is
-    still current (generation matches and the fitted width is the
-    owner's width); ``(True, None)`` for a finished-but-stale fit, which
-    is discarded, never installed.
+    Returns ``(done, model, error)``: ``(False, None, None)`` while the
+    fit thread is still running; ``(True, model, None)`` once it
+    finished AND the result is still current (generation matches and the
+    fitted width is the owner's width); ``(True, None, exc)`` when the
+    fit RAISED and the failure is still current (a stale failure is as
+    dead as a stale result); ``(True, None, None)`` for a
+    finished-but-stale fit, which is discarded, never installed.
     """
     thread, box, task_gen = task
     if thread.is_alive():
-        return False, None
+        return False, None, None
     thread.join()
+    if task_gen != gen:
+        return True, None, None
+    error = box.get("error")
+    if error is not None:
+        return True, None, error
     model = box.get("model")
-    if task_gen != gen or model is None or model.n_workers != width:
-        return True, None
-    return True, model
+    if model is None or model.n_workers != width:
+        return True, None, None
+    return True, model, None
 
 
 class ElasticController:
@@ -858,7 +882,7 @@ class ElasticController:
                  backend: str = "device", history: int = 512,
                  refit_steps: int = 150, refit_batch: int = 8,
                  refit_fresh: int = 4, refit_async: bool = False,
-                 fallback_warmup: int = 3):
+                 fallback_warmup: int = 3, refit_retries: int = 1):
         self.k_samples = k_samples
         self.min_frac = min_frac
         self.seed = seed
@@ -869,6 +893,8 @@ class ElasticController:
         self.refit_fresh = refit_fresh
         self.refit_async = refit_async
         self.fallback_warmup = fallback_warmup
+        self.refit_retries = refit_retries
+        self._refit_failures = 0          # consecutive failed async fits
         # architecture template for refits (widths change, shapes don't)
         self._lag = model.lag
         self._z_dim = model.z_dim
@@ -1012,12 +1038,16 @@ class ElasticController:
         return len(self._trace) >= self._lag + 1 + self.refit_batch
 
     def _maybe_refit(self):
-        if self._fresh < self.refit_fresh or not self._enough_rows():
+        # failed attempts back the respawn off exponentially: each one
+        # demands twice the fresh observations before the next try
+        need = self.refit_fresh * (2 ** self._refit_failures)
+        if self._fresh < need or not self._enough_rows():
             return
         # freeze width/seed now: a resize mid-fit must not retarget the
         # running fit (its result is discarded by generation anyway)
         rows = np.stack(self._trace)
-        n, seed = self._n, self.seed + self._resize_count
+        n = self._n
+        seed = self.seed + self._resize_count + 1000 * self._refit_failures
         if self.refit_async:
             self._refit_job = _spawn_refit(
                 lambda: self._fit_model(rows, n, seed), self._resize_count)
@@ -1030,12 +1060,26 @@ class ElasticController:
         # a resize since the fit started makes the result stale (wrong
         # membership, possibly even the wrong width) — _poll_refit_task
         # drops it by generation/width
-        done, model = _poll_refit_task(self._refit_job, self._resize_count,
-                                       self._n)
+        done, model, err = _poll_refit_task(self._refit_job,
+                                            self._resize_count, self._n)
         if not done:
             return
         self._refit_job = None
+        if err is not None:
+            self._refit_failures += 1
+            if self._refit_failures > self.refit_retries:
+                raise RefitError(
+                    f"DMM refit failed {self._refit_failures} times at "
+                    f"width {self._n} (retry budget {self.refit_retries} "
+                    f"spent); last error: {err!r}") from err
+            # log + retry: stay on the fallback, reschedule with backoff
+            print(f"DMM refit failed ({err!r}); retrying after "
+                  f"{self.refit_fresh * 2 ** self._refit_failures} fresh "
+                  f"observations")
+            self._fresh = 0
+            return
         if model is not None:
+            self._refit_failures = 0
             self._install_dmm(model)
 
     def _fit_model(self, rows: np.ndarray, n: int,

@@ -456,25 +456,41 @@ class Trainer:
     _stale: Any = field(default=None, repr=False)
 
     def restore_or_init(self, init_state_fn):
+        """Restore from the newest VALID checkpoint, else init cold.
+
+        Steps are tried newest-first: a corrupt or truncated step
+        (``store.CheckpointError`` — bad checksum, missing group, torn
+        manifest) is skipped and the previous one is used, so a damaged
+        latest checkpoint degrades to losing ``ckpt_every`` steps
+        instead of killing the restart.  The controller group is
+        restored from the SAME step as the train state.
+        """
         from repro.checkpoint import store
         if self.members is None:
             self.members = np.arange(self.n_workers)
-        if self.ckpt_dir and store.latest_step(self.ckpt_dir) is not None:
-            example = init_state_fn()
-            restored = store.restore(self.ckpt_dir,
-                                     {"state": example, "meta": {
-                                         "step": 0, "clock": 0.0}})
-            self.state = restored["state"]
-            self.step = int(restored["meta"]["step"])
-            self.sim_clock = float(restored["meta"]["clock"])
-            self._restore_controller(store)
-        else:
-            self.state = init_state_fn()
+        steps = (list(reversed(store.list_steps(self.ckpt_dir)))
+                 if self.ckpt_dir else [])
+        example = init_state_fn()
+        for step in steps:
+            try:
+                restored = store.restore(self.ckpt_dir,
+                                         {"state": example, "meta": {
+                                             "step": 0, "clock": 0.0}},
+                                         step=step)
+                self.state = restored["state"]
+                self.step = int(restored["meta"]["step"])
+                self.sim_clock = float(restored["meta"]["clock"])
+                self._restore_controller(store, step)
+                return self
+            except store.CheckpointError as e:
+                print(f"checkpoint step {step} unusable ({e}); "
+                      f"falling back to the previous step")
+        self.state = example
         return self
 
-    def _restore_controller(self, store):
+    def _restore_controller(self, store, step=None):
         """Warm-restore the straggler predictor from the ``ctl`` group."""
-        grp = store.restore_group(self.ckpt_dir, "ctl")
+        grp = store.restore_group(self.ckpt_dir, "ctl", step=step)
         if grp is None:
             return
         n_saved = int(grp["n"])

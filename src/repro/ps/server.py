@@ -158,6 +158,7 @@ class PSJob:
     fallback: Optional[C.ElfvingController] = None
     fresh: int = 0                      # observations since last (re)fit
     resize_count: int = 0
+    refit_failures: int = 0             # consecutive failed async fits
     fallback_steps: int = 0
     trace: list = field(default_factory=list, repr=False)  # refit data
     # decision plumbing (device refs, fetched lazily)
@@ -316,7 +317,8 @@ class PSServer:
     def __init__(self, registry: Optional[JobRegistry] = None, *,
                  history: int = 512, refit_steps: int = 150,
                  refit_batch: int = 8, refit_fresh: int = 4,
-                 refit_async: bool = False, fallback_warmup: int = 3):
+                 refit_async: bool = False, fallback_warmup: int = 3,
+                 refit_retries: int = 1):
         self.registry = registry if registry is not None else JobRegistry()
         self.history = history
         self.refit_steps = refit_steps
@@ -324,6 +326,7 @@ class PSServer:
         self.refit_fresh = refit_fresh
         self.refit_async = refit_async
         self.fallback_warmup = fallback_warmup
+        self.refit_retries = refit_retries
         self._buckets: Dict[tuple, _Bucket] = {}
         self._queue: List[dict] = []
         self.dispatches = 0             # fused decision dispatches issued
@@ -808,13 +811,16 @@ class PSServer:
         return model
 
     def _maybe_refit(self, job: PSJob):
-        if (job.fresh < self.refit_fresh
+        # failed attempts back off: each demands twice the fresh rows
+        need = self.refit_fresh * (2 ** job.refit_failures)
+        if (job.fresh < need
                 or len(job.trace) < job.cap + self.refit_batch):
             return
         # freeze width/seed now: a resize mid-fit must not retarget the
         # running fit (its result is discarded by generation anyway)
         rows = np.stack(job.trace)
-        n, seed = job.width, job.seed + job.resize_count
+        n = job.width
+        seed = job.seed + job.resize_count + 1000 * job.refit_failures
         if self.refit_async:
             job.refit_task = C._spawn_refit(
                 lambda: self._fit_model(job, rows, n, seed),
@@ -825,12 +831,27 @@ class PSServer:
     def _poll_refit(self, job: PSJob):
         if job.refit_task is None:
             return
-        done, model = C._poll_refit_task(job.refit_task, job.resize_count,
-                                         job.width)
+        done, model, err = C._poll_refit_task(job.refit_task,
+                                              job.resize_count, job.width)
         if not done:
             return
         job.refit_task = None
+        if err is not None:
+            job.refit_failures += 1
+            if job.refit_failures > self.refit_retries:
+                raise C.RefitError(
+                    f"job {job.job_id!r}: DMM refit failed "
+                    f"{job.refit_failures} times at width {job.width} "
+                    f"(retry budget {self.refit_retries} spent); last "
+                    f"error: {err!r}") from err
+            print(f"job {job.job_id!r}: DMM refit failed ({err!r}); "
+                  f"retrying after "
+                  f"{self.refit_fresh * 2 ** job.refit_failures} fresh "
+                  f"observations")
+            job.fresh = 0
+            return
         if model is not None and job.mode == "fallback":
+            job.refit_failures = 0
             self._install_refit(job, model)
 
     def _install_refit(self, job: PSJob, model: RuntimeModel):

@@ -1,0 +1,113 @@
+"""Live subprocess crash drill for the control plane.
+
+Real OS processes (``python -m repro.controlplane.worker``), a real
+``kill -9``, a real hang (flag file: the incarnation spins alive but
+silent), one flaky restart incarnation, and warm recovery by GLOBAL
+worker id from a pre-saved ``"ctl"`` checkpoint group.  Prints one
+OK/FAIL line per property; driven by tests/test_sharded_equivalence.py
+and ``scripts/ci.sh --drill``.
+"""
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import store
+from repro.controlplane import (Fault, FaultInjector, FaultPlan,
+                                ProcWorkerPool, Supervisor)
+from repro.controlplane.supervisor import drill_report
+
+failures = []
+
+
+def check(name, ok):
+    print(f"{name:56s} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(name)
+
+
+N = 3
+TICK = 0.25                 # wall seconds per control tick
+SUSPECT, DEAD_AFTER = 2, 4
+CKPT_STEP = 7
+
+root = tempfile.mkdtemp(prefix="cp_drill_")
+run_dir, ckpt_dir = f"{root}/run", f"{root}/ckpt"
+
+# the checkpoint every incarnation warm-starts from, keyed by GLOBAL id
+store.save(ckpt_dir, CKPT_STEP,
+           {"ctl": {"step": np.int64(CKPT_STEP),
+                    "members": np.arange(N)}})
+
+# worker 0's first restart attempt exits on arrival (flaky incarnation)
+inj = FaultInjector(FaultPlan([Fault(at=0, kind="flaky_restart",
+                                     worker=0, fails=1)]))
+inj.fire(0)                 # arm the flaky budget
+
+pool = ProcWorkerPool(N, run_dir, period=0.05, ckpt_dir=ckpt_dir,
+                      injector=inj)
+sup = Supervisor(pool, suspect_after=SUSPECT, dead_after=DEAD_AFTER,
+                 grace=30, restart_base=2, restart_cap=8, flap_limit=3,
+                 seed=0)
+pool.launch_all()
+
+CRASH_AT = HANG_AT = 8
+shrank = False
+try:
+    for t in range(1, 49):
+        time.sleep(TICK)
+        if t == CRASH_AT:
+            pool.sigkill(0)                       # the real crash
+            sup.log.emit(t, "fault", 0, fault="crash")
+        if t == HANG_AT:
+            pool.hang(2)                          # alive but silent
+            sup.log.emit(t, "fault", 2, fault="hang")
+        sup.tick(t)
+        if sup.membership().size < N:
+            shrank = True
+
+    evs = sup.log.events
+    rep = drill_report(evs)
+
+    check("both faults detected", rep["n_detected"] == 2)
+    check("detection within deadline + 1 tick",
+          rep["max_detection_ticks"] is not None
+          and rep["max_detection_ticks"] <= DEAD_AFTER + 1)
+    check("dead workers left the membership", shrank)
+
+    kills = [e for e in evs if e.kind == "kill"]
+    check("hung worker killed before restart (exactly one kill)",
+          [e.worker for e in kills] == [2]
+          and kills[0].data.get("reason") == "hung")
+
+    fails = [e for e in evs if e.kind == "restart_failed"]
+    check("flaky incarnation burned one failed attempt",
+          [e.worker for e in fails] == [0])
+    restarts = [e for e in evs if e.kind == "restart"]
+    check("both fallen workers restarted",
+          sorted({e.worker for e in restarts}) == [0, 2])
+    r0 = [e for e in restarts if e.worker == 0]
+    check("flaky worker's landing attempt is #2",
+          len(r0) == 1 and r0[0].data.get("attempt") == 2)
+
+    recs = [e for e in evs if e.kind == "recover"]
+    by_w = {w: [e for e in recs if e.worker == w] for w in range(N)}
+    check("every incarnation recovered warm from the ctl group",
+          recs != [] and all(e.data.get("step") == CKPT_STEP
+                             and e.data.get("warm") for e in recs))
+    check("restarted workers recovered AGAIN by global id",
+          len(by_w[0]) >= 2 and len(by_w[2]) >= 2 and len(by_w[1]) == 1)
+
+    check("membership healed to full width",
+          [int(w) for w in sup.membership()] == list(range(N)))
+    check("no evictions", rep["evicted"] == [])
+    check("all incarnations alive at the end",
+          all(pool.proc_running(w) for w in range(N)))
+finally:
+    pool.shutdown()
+    shutil.rmtree(root, ignore_errors=True)
+
+print("controlplane_drill_check:", "FAIL" if failures else "OK", failures)
+sys.exit(1 if failures else 0)

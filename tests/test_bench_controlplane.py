@@ -1,0 +1,75 @@
+"""BENCH_controlplane.json schema guard.
+
+Runs ``benchmarks.controlplane_bench.bench_controlplane`` at quick size
+and asserts the machine-readable output keeps the
+``bench_controlplane/v1`` contract — including the two hard gates
+``scripts/ci.sh --bench`` pins: detection within deadline + 1 tick, and
+supervised steps-lost strictly below the unsupervised baseline.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+DETECTION_KEYS = ("n_workers", "ticks", "dead_after", "suspect_after",
+                  "n_faults", "n_detected", "max_detection_ticks",
+                  "mean_detection_ticks", "restarts", "evicted",
+                  "us_per_tick")
+RECOVERY_KEYS = ("n_workers", "steps", "n_faults", "n_detected",
+                 "max_detection_ticks", "mean_recovery_ticks",
+                 "restarts", "failed_restarts", "evicted",
+                 "widths_seen", "steps_lost", "clock", "timeout_steps",
+                 "throughput_retained", "scripted_replay_match")
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    from benchmarks.controlplane_bench import bench_controlplane
+
+    out = tmp_path_factory.mktemp("bench") / "BENCH_controlplane.json"
+    bench_controlplane(quick=True, out_path=str(out))
+    with open(out) as f:
+        return json.load(f)
+
+
+def _check_payload(data):
+    assert data["schema"] == "bench_controlplane/v1"
+    det, rec = data["detection"], data["recovery"]
+    for key in DETECTION_KEYS:
+        assert key in det, key
+    for key in RECOVERY_KEYS:
+        assert key in rec, key
+    # every storm fault is a crash or hang: all must be detected, and
+    # never later than the heartbeat deadline + 1 tick
+    assert det["n_detected"] == det["n_faults"] > 0
+    assert 1 <= det["max_detection_ticks"] <= det["dead_after"] + 1
+    assert det["us_per_tick"] > 0
+    assert rec["n_detected"] == rec["n_faults"] == 2
+    assert rec["max_detection_ticks"] <= det["dead_after"] + 1
+    # the supervisor restarts what it kills: strictly fewer worker-steps
+    # lost than the same storm with nobody watching
+    lost = rec["steps_lost"]
+    assert 0 < lost["supervised"] < lost["unsupervised"]
+    assert rec["restarts"] >= 2 and rec["failed_restarts"] >= 1
+    assert rec["evicted"] == []
+    assert rec["scripted_replay_match"] is True
+    assert rec["throughput_retained"] > 0
+    assert rec["clock"]["fault_free"] > 0
+
+
+def test_bench_controlplane_schema(bench_json):
+    _check_payload(bench_json)
+    assert bench_json["quick"] is True
+
+
+def test_committed_bench_controlplane_matches_schema():
+    """The checked-in BENCH_controlplane.json must exist and satisfy the
+    same contract the CI gate re-derives from a fresh run."""
+    path = (Path(__file__).resolve().parent.parent
+            / "BENCH_controlplane.json")
+    assert path.exists(), "BENCH_controlplane.json not committed"
+    with open(path) as f:
+        _check_payload(json.load(f))

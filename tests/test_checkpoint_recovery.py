@@ -1,0 +1,269 @@
+"""Checkpoint crash-window recovery + integrity checksums.
+
+The publish sequence ``rename(final, stale) -> rename(tmp, final) ->
+rmtree(stale)`` has three crash windows.  Each test builds the exact
+partial disk state a crash at that point leaves behind and asserts
+``recover`` (run implicitly by every open) repairs it — most
+importantly the window between the two renames, where NO ``step_<step>``
+dir exists and the old code's next save deleted both surviving copies
+as debris.
+
+Integrity: every group file's CRC-32 lives in the manifest; corruption
+raises ``CheckpointError`` NAMING the bad group, and recovery walks back
+to the newest fully-valid step (``latest_valid_step`` / the Trainer's
+restore fallback).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.checkpoint.store import CheckpointError
+
+
+def _state(v: float):
+    return {"state": {"w": np.full((3, 2), v), "b": np.arange(4.0) * v},
+            "meta": {"step": 0, "clock": 0.0}}
+
+
+def _save(d, step, v, keep=10):
+    st = _state(v)
+    st["meta"]["step"] = step
+    return store.save(str(d), step, st, keep=keep)
+
+
+def _restored_value(d, step=None):
+    out = store.restore(str(d), _state(0.0), step=step)
+    return float(out["state"]["w"][0, 0])
+
+
+def _park_as(d, step, name):
+    """Move the published step dir aside under ``name`` (tmp/stale)."""
+    os.rename(os.path.join(d, f"step_{step:010d}"), os.path.join(d, name))
+
+
+# ---------------------------------------------------------------------------
+# Crash windows, one partial disk state per test.
+# ---------------------------------------------------------------------------
+
+
+def test_crash_between_renames_promotes_complete_tmp(tmp_path):
+    """Crash after rename(final, stale), before rename(tmp, final): no
+    final dir at all.  The COMPLETE tmp (manifest present) must win —
+    it is the newer checkpoint, fully written."""
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    _park_as(d, 5, "stale.5")           # the old copy, parked
+    scratch = tmp_path / "scratch"
+    _save(scratch, 5, v=2.0)            # the new copy, fully written...
+    os.rename(os.path.join(scratch, f"step_{5:010d}"),
+              os.path.join(d, "tmp.5"))  # ...but never published
+    assert store.latest_step(d) == 5     # recovery ran on open
+    assert _restored_value(d) == 2.0     # the tmp content won
+    assert not os.path.exists(os.path.join(d, "tmp.5"))
+    assert not os.path.exists(os.path.join(d, "stale.5"))
+
+
+def test_crash_mid_write_restores_stale(tmp_path):
+    """Crash while WRITING tmp (no manifest yet) after parking the old
+    dir: the stale copy is the only complete one — put it back."""
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    _park_as(d, 5, "stale.5")
+    os.makedirs(os.path.join(d, "tmp.5"))
+    np.savez(os.path.join(d, "tmp.5", "state.npz"), w=np.zeros(2))
+    assert store.latest_step(d) == 5
+    assert _restored_value(d) == 1.0     # the old checkpoint survived
+    assert not os.path.exists(os.path.join(d, "tmp.5"))
+
+
+def test_crash_before_stale_cleanup_drops_debris(tmp_path):
+    """Crash after publishing, before rmtree(stale): the new final is
+    current, the parked old copy is debris."""
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    _park_as(d, 5, "stale.5")           # the old copy, parked aside
+    scratch = tmp_path / "scratch"
+    _save(scratch, 5, v=2.0)
+    os.rename(os.path.join(scratch, f"step_{5:010d}"),
+              os.path.join(d, f"step_{5:010d}"))  # publish completed
+    assert store.latest_step(d) == 5
+    assert _restored_value(d) == 2.0     # the published copy wins
+    assert not os.path.exists(os.path.join(d, "stale.5"))
+
+
+def test_incomplete_fresh_tmp_is_debris(tmp_path):
+    """A fresh-step save that died mid-write leaves only a manifest-less
+    tmp; the previous step stays latest."""
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    os.makedirs(os.path.join(d, "tmp.6"))
+    np.savez(os.path.join(d, "tmp.6", "state.npz"), w=np.zeros(2))
+    assert store.latest_step(d) == 5
+    assert not os.path.exists(os.path.join(d, "tmp.6"))
+
+
+def test_resave_after_crash_window_does_not_lose_the_step(tmp_path):
+    """THE regression: with no step dir on disk (crash between renames),
+    the next save of that step used to rmtree both tmp and stale as
+    debris before writing — a second crash then lost every copy.  Now
+    recovery promotes BEFORE the save touches anything."""
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    _park_as(d, 5, "stale.5")
+    scratch = tmp_path / "scratch"
+    _save(scratch, 5, v=2.0)
+    os.rename(os.path.join(scratch, f"step_{5:010d}"),
+              os.path.join(d, "tmp.5"))
+    _save(d, 5, v=3.0)                  # re-save of the crashed step
+    assert _restored_value(d) == 3.0
+    assert store.list_steps(d) == [5]
+
+
+# ---------------------------------------------------------------------------
+# Checksums + fallback.
+# ---------------------------------------------------------------------------
+
+
+def _corrupt(d, step, group="state"):
+    path = os.path.join(str(d), f"step_{step:010d}", f"{group}.npz")
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_corrupt_group_raises_naming_it(tmp_path):
+    _save(tmp_path, 5, v=1.0)
+    _corrupt(tmp_path, 5, "state")
+    with pytest.raises(CheckpointError, match="group 'state'"):
+        store.restore(str(tmp_path), _state(0.0))
+    with pytest.raises(CheckpointError, match="group 'state'"):
+        store.verify_step(str(tmp_path), 5)
+    with pytest.raises(CheckpointError, match="group 'state'"):
+        store.restore_group(str(tmp_path), "state")
+
+
+def test_latest_valid_step_walks_past_corruption(tmp_path):
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    _save(d, 10, v=2.0)
+    assert store.latest_valid_step(d) == 10
+    _corrupt(d, 10)
+    assert store.latest_step(d) == 10          # still the newest dir...
+    assert store.latest_valid_step(d) == 5     # ...but not the anchor
+    assert _restored_value(d, step=5) == 1.0
+
+
+def test_missing_group_file_raises(tmp_path):
+    _save(tmp_path, 5, v=1.0)
+    os.remove(os.path.join(str(tmp_path), f"step_{5:010d}", "state.npz"))
+    with pytest.raises(CheckpointError, match="file missing"):
+        store.verify_step(str(tmp_path), 5)
+
+
+def test_torn_manifest_raises(tmp_path):
+    _save(tmp_path, 5, v=1.0)
+    man = os.path.join(str(tmp_path), f"step_{5:010d}", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 5, "gro')
+    with pytest.raises(CheckpointError, match="manifest"):
+        store.verify_step(str(tmp_path), 5)
+
+
+def test_pre_checksum_manifest_still_restores(tmp_path):
+    """Checkpoints written before checksums existed (no crc32 field)
+    must keep restoring — integrity is simply not verifiable."""
+    d = str(tmp_path)
+    _save(d, 5, v=1.0)
+    man = os.path.join(d, f"step_{5:010d}", "manifest.json")
+    with open(man) as f:
+        manifest = json.load(f)
+    for g in manifest["groups"].values():
+        g.pop("crc32")
+    with open(man, "w") as f:
+        json.dump(manifest, f)
+    assert _restored_value(d) == 1.0
+    assert store.latest_valid_step(d) == 5
+
+
+# ---------------------------------------------------------------------------
+# Trainer restore fallback (corrupt latest -> previous step, warm).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_train():
+    import jax
+
+    from repro import optim
+    from repro.configs.base import bench_tiny_config
+    from repro.launch.train import jit_train_step
+    from repro.models import model as M
+
+    cfg = bench_tiny_config()
+    opt = optim.adamw(1e-3)
+    step_fn = jit_train_step(cfg, opt)
+
+    def init_fn():
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    return cfg, step_fn, init_fn
+
+
+def test_trainer_falls_back_to_previous_step_on_corruption(tmp_path,
+                                                           tiny_train):
+    from repro.core.controller import ElfvingController
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.train import Trainer
+
+    cfg, step_fn, init_fn = tiny_train
+    d = str(tmp_path / "ckpt")
+
+    def make(n=4):
+        data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                               global_batch=16, seed=0)
+        return Trainer(cfg=cfg, step_fn=step_fn, data=data,
+                       controller=ElfvingController(n), n_workers=n,
+                       ckpt_dir=d, ckpt_every=4, keep=5)
+
+    tr = make().restore_or_init(init_fn)
+    tr.run(8)                            # checkpoints at steps 4 and 8
+    assert store.list_steps(d) == [4, 8]
+    _corrupt(d, 8, "state")
+
+    tr2 = make().restore_or_init(init_fn)
+    assert tr2.step == 4                 # warm restart from the good step
+    assert tr2.sim_clock > 0.0
+    # the controller group came from the SAME step as the train state
+    grp = store.restore_group(d, "ctl", step=4)
+    assert int(grp["step"]) == int(getattr(tr2.controller, "_step", 4))
+
+    tr3 = make().restore_or_init(init_fn)
+    _ = tr3  # second restore is idempotent (recovery already ran)
+
+
+def test_trainer_cold_init_when_every_step_corrupt(tmp_path, tiny_train):
+    from repro.core.controller import ElfvingController
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.train import Trainer
+
+    cfg, step_fn, init_fn = tiny_train
+    d = str(tmp_path / "ckpt")
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
+                           global_batch=16, seed=0)
+
+    def make():
+        return Trainer(cfg=cfg, step_fn=step_fn, data=data,
+                       controller=ElfvingController(4), n_workers=4,
+                       ckpt_dir=d, ckpt_every=4)
+
+    tr = make().restore_or_init(init_fn)
+    tr.run(4)
+    _corrupt(d, 4, "meta")
+    tr2 = make().restore_or_init(init_fn)
+    assert tr2.step == 0                 # cold, but alive

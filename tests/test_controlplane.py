@@ -1,0 +1,374 @@
+"""Control plane: event stream, heartbeat state machine, supervisor.
+
+The contracts the subsystem stands on:
+
+  * the heartbeat monitor NEVER declares a worker dead before its
+    deadline, and (advanced every tick) declares it dead at EXACTLY
+    ``last_beat + dead_after + 1`` — so detection latency is the
+    deadline + 1 tick, which the controlplane bench gates on;
+  * ``admit`` always re-admits under the flap limit; permanent eviction
+    is the supervisor's call, never the monitor's;
+  * the event stream is monotone in (seq, tick) and survives a writer
+    crash mid-append;
+  * the supervisor run of a seeded fault plan equals the SAME schedule
+    replayed as a scripted ChurnSim run, loss for loss — detected
+    elasticity is a faithful stand-in for an oracle script.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.simulator import ClusterSim, OverlaySim
+from repro.controlplane.events import Event, EventLog, read_events
+from repro.controlplane.faults import Fault, FaultInjector, FaultPlan
+from repro.controlplane.heartbeat import (ALIVE, DEAD, SUSPECT,
+                                          HeartbeatMonitor)
+from repro.controlplane.supervisor import (SimWorkerPool, SupervisedTimer,
+                                           Supervisor, drill_report)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Event stream.
+# ---------------------------------------------------------------------------
+
+
+def test_event_log_roundtrip(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with EventLog(path) as log:
+        log.emit(0, "run", phase="start")
+        log.emit(3, "suspect", 2, silent_ticks=3)
+        log.emit(5, "dead", 2, last_beat=0, silent_ticks=5)
+    back = read_events(path)
+    assert [e.kind for e in back] == ["run", "suspect", "dead"]
+    assert back[1].worker == 2 and back[1].data["silent_ticks"] == 3
+    assert [e.seq for e in back] == [0, 1, 2]
+    # the file is the in-memory stream (wall stamps round to µs on disk)
+    assert [(e.seq, e.tick, e.kind, e.worker, e.data) for e in back] == \
+        [(e.seq, e.tick, e.kind, e.worker, e.data) for e in log.events]
+
+
+def test_event_log_rejects_unknown_kind_and_backwards_tick():
+    log = EventLog()
+    with pytest.raises(ValueError, match="unknown event kind"):
+        log.emit(0, "explode")
+    log.emit(5, "dead", 0)
+    with pytest.raises(ValueError, match="backwards"):
+        log.emit(4, "rejoin", 0)
+
+
+def test_read_events_tolerates_partial_trailing_line(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with EventLog(path) as log:
+        log.emit(0, "run")
+        log.emit(1, "dead", 3)
+    with open(path, "a") as f:          # writer died mid-append
+        f.write('{"seq": 2, "tick": 2, "ki')
+    back = read_events(path)
+    assert [e.kind for e in back] == ["run", "dead"]
+    # but a malformed COMPLETE line is an error, not silently skipped
+    with open(path, "a") as f:
+        f.write("garbage }{\n")
+    with pytest.raises(json.JSONDecodeError):
+        read_events(path)
+
+
+def test_event_json_roundtrip_preserves_payload():
+    ev = Event(seq=7, tick=42, kind="restart", worker=3, wall=1.5,
+               data={"attempt": 2, "failures": 1})
+    back = Event.from_json(ev.to_json())
+    assert back == ev
+
+
+def test_of_kind_filters():
+    log = EventLog()
+    log.emit(0, "run")
+    log.emit(1, "dead", 0)
+    log.emit(2, "restart", 0, attempt=1)
+    assert [e.kind for e in log.of_kind("dead", "restart")] == [
+        "dead", "restart"]
+
+
+# ---------------------------------------------------------------------------
+# Fault plans / injector.
+# ---------------------------------------------------------------------------
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(at=1, kind="meteor", worker=0)
+    with pytest.raises(ValueError, match="needs a worker"):
+        Fault(at=1, kind="crash")
+    Fault(at=1, kind="corrupt_ckpt")    # the one worker-free kind
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 200), n=st.integers(3, 12))
+def test_storm_one_fault_per_worker_with_gap(seed, n):
+    k = min(3, n)
+    plan = FaultPlan.storm(n, k, horizon=60, seed=seed, min_gap=3)
+    workers = [f.worker for f in plan.faults]
+    assert len(set(workers)) == len(workers) == k
+    ticks = sorted(f.at for f in plan.faults)
+    assert all(b - a >= 3 for a, b in zip(ticks, ticks[1:]))
+    assert all(f.at >= 1 for f in plan.faults)
+
+
+def test_injector_fires_each_fault_once_and_burns_flaky_budget():
+    plan = FaultPlan([Fault(at=2, kind="crash", worker=0),
+                      Fault(at=2, kind="flaky_restart", worker=1, fails=2)])
+    inj = FaultInjector(plan)
+    assert [f.kind for f in inj.fire(2)] == ["crash", "flaky_restart"]
+    assert inj.fire(2) == []            # once means once
+    assert inj.restart_should_fail(1)
+    assert inj.restart_should_fail(1)
+    assert not inj.restart_should_fail(1)   # budget spent
+    assert not inj.restart_should_fail(0)   # never armed
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat state machine: property tests.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 8),
+       suspect_after=st.integers(1, 4), extra=st.integers(1, 4))
+def test_never_dead_before_deadline_and_exact_detection(seed, n,
+                                                        suspect_after,
+                                                        extra):
+    """Advanced every tick under a random beat schedule: nobody is dead
+    while silence <= dead_after, and death lands at exactly
+    last_beat + dead_after + 1."""
+    dead_after = suspect_after + extra
+    rng = np.random.default_rng(seed)
+    m = HeartbeatMonitor(range(n), suspect_after=suspect_after,
+                         dead_after=dead_after)
+    last = {w: 0 for w in range(n)}
+    dead_at = {}
+    for tick in range(1, 40):
+        for w in range(n):
+            if w not in dead_at and rng.uniform() < 0.6:
+                m.beat(w, tick)
+                last[w] = tick
+        for (w, _old, new) in m.advance(tick):
+            if new == DEAD:
+                dead_at[w] = tick
+        for w in range(n):
+            silent = tick - last[w]
+            if silent <= dead_after:
+                assert m.state(w) != DEAD, (w, tick, last[w])
+    for w, t in dead_at.items():
+        assert t == last[w] + dead_after + 1
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 6))
+def test_admit_always_readmits_and_restarts_deadline(seed, n):
+    rng = np.random.default_rng(seed)
+    m = HeartbeatMonitor(range(n), suspect_after=2, dead_after=4)
+    admitted_at = {}
+    for tick in range(1, 40):
+        m.advance(tick)
+        # the deadline clock restarted on admit: not even suspect
+        # within suspect_after ticks of the re-admission
+        for w, at in admitted_at.items():
+            if tick - at <= 2:
+                assert m.state(w) == ALIVE
+        for w in range(n):
+            if m.state(w) == DEAD and rng.uniform() < 0.5:
+                m.admit(w, tick)
+                assert m.state(w) == ALIVE
+                assert w in m.members()
+                admitted_at[w] = tick
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 500), n=st.integers(2, 6))
+def test_event_stream_monotone(seed, n):
+    rng = np.random.default_rng(seed)
+    log = EventLog()
+    m = HeartbeatMonitor(range(n), suspect_after=1, dead_after=2, log=log)
+    for tick in range(1, 25):
+        for w in range(n):
+            if rng.uniform() < 0.4:
+                m.beat(w, tick)
+        m.advance(tick)
+        for w in range(n):
+            if m.state(w) == DEAD and rng.uniform() < 0.3:
+                m.admit(w, tick)
+    seqs = [e.seq for e in log.events]
+    ticks = [e.tick for e in log.events]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert ticks == sorted(ticks)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat: directed drills.
+# ---------------------------------------------------------------------------
+
+
+def test_suspect_then_false_alarm_rejoin():
+    log = EventLog()
+    m = HeartbeatMonitor([0], suspect_after=2, dead_after=5, log=log)
+    m.advance(3)                        # silent 3 > 2: suspect
+    assert m.state(0) == SUSPECT
+    assert 0 in m.members()             # a suspect still holds its lease
+    m.beat(0, 4)                        # false alarm
+    assert m.state(0) == ALIVE
+    rejoins = log.of_kind("rejoin")
+    assert len(rejoins) == 1 and rejoins[0].data["false_alarm"]
+
+
+def test_dead_workers_late_beat_is_dropped():
+    m = HeartbeatMonitor([0], suspect_after=1, dead_after=2)
+    m.advance(3)
+    assert m.state(0) == DEAD
+    m.beat(0, 4)                        # too late: membership already shrank
+    assert m.state(0) == DEAD and m.members().size == 0
+    m.admit(0, 5)                       # the supervisor's restart path
+    assert m.state(0) == ALIVE
+
+
+def test_grace_covers_slow_first_beat():
+    """A freshly admitted worker gets grace ticks for its first beat
+    (subprocess interpreter startup); after the first beat the normal
+    deadline applies."""
+    m = HeartbeatMonitor([0], suspect_after=2, dead_after=4, grace=10,
+                         start_tick=0)
+    m.advance(8)                        # silent 8 <= grace 10
+    assert m.state(0) == ALIVE
+    m.beat(0, 9)
+    m.advance(14)                       # silent 5 > dead_after: grace is over
+    assert m.state(0) == DEAD
+
+
+def test_monitor_validates_deadlines():
+    with pytest.raises(ValueError, match="suspect_after"):
+        HeartbeatMonitor([0], suspect_after=4, dead_after=4)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor over the simulated pool.
+# ---------------------------------------------------------------------------
+
+
+def _sim_stack(n=4, faults=(), seed=0, **sup_kw):
+    overlay = OverlaySim(ClusterSim(n_workers=n, n_nodes=2, seed=seed))
+    inj = FaultInjector(FaultPlan(list(faults)), seed=seed)
+    pool = SimWorkerPool(overlay, inj)
+    kw = dict(suspect_after=2, dead_after=4, restart_base=2,
+              restart_cap=16, flap_limit=3, seed=seed)
+    kw.update(sup_kw)
+    return overlay, Supervisor(pool, **kw)
+
+
+def test_crash_detected_within_deadline_plus_one_and_restarted():
+    overlay, sup = _sim_stack(faults=[Fault(at=5, kind="crash", worker=3)])
+    for t in range(40):
+        sup.tick(t)
+    report = drill_report(sup.log.events)
+    [inc] = report["incidents"]
+    assert inc["detected"]
+    # last beat was tick 4 (fault fired before the tick-5 beat round):
+    # detection at 4 + dead_after + 1 = 9, i.e. fault + dead_after
+    assert inc["dead_tick"] == 9
+    assert inc["detection_ticks"] <= sup.monitor.dead_after + 1
+    assert inc["rejoin_tick"] is not None
+    assert not overlay.stalled[3]       # the restart cleared the stall
+    assert sup.membership().tolist() == [0, 1, 2, 3]
+    # membership events mark both the shrink and the regrow
+    members = [e.data["members"] for e in sup.log.of_kind("membership")]
+    assert [0, 1, 2] in members and [0, 1, 2, 3] in members
+
+
+def test_hung_worker_is_killed_before_restart():
+    _, sup = _sim_stack(faults=[Fault(at=5, kind="hang", worker=1)])
+    for t in range(30):
+        sup.tick(t)
+    kills = sup.log.of_kind("kill")
+    assert [e.worker for e in kills] == [1]
+    restarts = sup.log.of_kind("restart")
+    assert [e.worker for e in restarts] == [1]
+    # the kill lands before the restart in the stream
+    assert kills[0].seq < restarts[0].seq
+
+
+def test_flaky_restarts_back_off_then_evict():
+    _, sup = _sim_stack(
+        faults=[Fault(at=5, kind="crash", worker=2),
+                Fault(at=5, kind="flaky_restart", worker=2, fails=3)],
+        flap_limit=3)
+    for t in range(80):
+        sup.tick(t)
+    fails = sup.log.of_kind("restart_failed")
+    assert [e.worker for e in fails] == [2, 2, 2]
+    # capped exponential backoff between attempts: 2, 4, 8
+    gaps = np.diff([e.tick for e in fails])
+    assert gaps.tolist() == [4, 8]
+    evicts = sup.log.of_kind("evict")
+    assert [e.worker for e in evicts] == [2]
+    assert 2 in sup.evicted
+    assert sup.membership().tolist() == [0, 1, 3]   # permanently out
+    assert not sup.log.of_kind("restart")           # never came back
+
+
+def test_slowdown_never_triggers_detection():
+    """Slowdowns keep heartbeats flowing — the cutoff controller's case,
+    not the supervisor's; membership must not budge."""
+    overlay, sup = _sim_stack(
+        faults=[Fault(at=5, kind="slowdown", worker=0, factor=5.0,
+                      duration=6)])
+    for t in range(20):
+        sup.tick(t)
+    assert not sup.log.of_kind("dead", "suspect", "kill")
+    assert sup.membership().size == 4
+    assert overlay.mult[0] == 1.0       # expired after duration ticks
+
+
+def test_supervised_timer_tracks_membership():
+    overlay, sup = _sim_stack(faults=[Fault(at=5, kind="crash", worker=3)])
+    timer = SupervisedTimer(overlay, sup)
+    widths = []
+    for t in range(16):
+        sup.tick(t)
+        row = timer.step()
+        widths.append(row.size)
+        assert row.size == timer.n_workers == timer.active_ids.size
+    assert 3 in widths and 4 in widths  # shrank on detection, regrew
+
+
+def test_sim_pool_emits_warm_recover_from_ctl_group(tmp_path):
+    from repro.checkpoint import store
+    ckpt = str(tmp_path / "ckpt")
+    store.save(ckpt, 7, {"ctl": {"n": np.int64(4),
+                                 "members": np.arange(4),
+                                 "step": np.int64(7)}})
+    _, sup = _sim_stack(faults=[Fault(at=5, kind="crash", worker=2)])
+    sup.pool.ckpt_dir = ckpt
+    for t in range(30):
+        sup.tick(t)
+    [rec] = sup.log.of_kind("recover")
+    assert rec.worker == 2 and rec.data["step"] == 7 and rec.data["warm"]
+
+
+# ---------------------------------------------------------------------------
+# Supervised run == scripted replay (the equivalence drill, sim mode).
+# ---------------------------------------------------------------------------
+
+
+def test_supervised_equals_scripted_replay():
+    from repro.launch.supervised import run_supervised
+    out = run_supervised(steps=36, seed=0, n_workers=6, verbose=False)
+    assert out["match"], "supervised losses diverged from scripted replay"
+    report = out["report"]
+    assert report["n_detected"] == 2            # the crash and the hang
+    assert report["max_detection_ticks"] <= 4 + 1
+    assert report["failed_restarts"] == 1       # the flaky incarnation
+    assert report["evicted"] == []
+    assert sorted(set(out["widths"])) == [5, 6]

@@ -21,7 +21,9 @@ from repro.cluster.simulator import (ChurnEvent, ChurnSim, ClusterSim,
 from repro.cluster.trace import TraceReplay, load_trace, save_trace
 from repro.core.controller import (CutoffController, ElasticController,
                                    ElfvingController, FullSyncController,
-                                   StaticCutoffController, remap_columns)
+                                   RefitError, StaticCutoffController,
+                                   _poll_refit_task, _spawn_refit,
+                                   remap_columns)
 from repro.core.runtime_model.api import RuntimeModel
 from repro.configs.base import bench_tiny_config
 from repro.data.pipeline import SyntheticTokens
@@ -227,6 +229,74 @@ def test_elastic_async_refit_dropped_by_generation(fitted8):
     ctl._refit_job = (done, {"model": model6}, ctl._resize_count)
     ctl._poll_refit()
     assert ctl.mode == "dmm" and ctl._dmm.n == 6
+
+
+def _finished_thread():
+    t = threading.Thread(target=lambda: None)
+    t.start()
+    t.join()
+    return t
+
+
+def test_spawn_refit_captures_exception():
+    """A fit that raises is captured in the result box and surfaced from
+    the poll — never lost on the worker thread."""
+    task = _spawn_refit(lambda: 1 / 0, 3)
+    task[0].join()
+    done, model, err = _poll_refit_task(task, 3, 8)
+    assert done and model is None
+    assert isinstance(err, ZeroDivisionError)
+    # the SAME failure at a stale generation is discarded like a result
+    done, model, err = _poll_refit_task(task, 4, 8)
+    assert done and model is None and err is None
+
+
+def test_elastic_refit_failure_retries_then_raises(fitted8, monkeypatch):
+    """First async fit failure: logged, one retry scheduled with doubled
+    fresh-observation backoff; second failure past the budget raises
+    RefitError from the poll (the owner's thread, not the fit thread)."""
+    rm, trace = fitted8
+    ctl = ElasticController(rm, k_samples=16, seed=0, refit_async=True,
+                            refit_fresh=2, refit_retries=1)
+    ctl.seed_window(trace[-40:])
+    ctl.resize(6)
+
+    def boom(rows, n, seed):
+        raise RuntimeError("ELBO diverged")
+
+    monkeypatch.setattr(ctl, "_fit_model", boom)
+    for _ in range(2):
+        ctl.observe(np.ones(6))
+    assert ctl._refit_job is not None      # spawned at refit_fresh
+    ctl._refit_job[0].join()
+    ctl.predict_cutoff()                   # failure #1: retry, no raise
+    assert ctl.mode == "fallback"
+    assert ctl._refit_failures == 1 and ctl._fresh == 0
+    # backoff: refit_fresh observations are no longer enough to respawn
+    for _ in range(2):
+        ctl.observe(np.ones(6))
+    assert ctl._refit_job is None
+    for _ in range(2):
+        ctl.observe(np.ones(6))
+    assert ctl._refit_job is not None      # retry at 2x refit_fresh
+    ctl._refit_job[0].join()
+    with pytest.raises(RefitError, match="retry budget"):
+        ctl.predict_cutoff()
+
+
+def test_elastic_stale_refit_failure_burns_no_budget(fitted8):
+    """An error from an ABANDONED generation (resize since spawn) is
+    dropped exactly like a stale success — no retry burned, no raise."""
+    rm, trace = fitted8
+    ctl = ElasticController(rm, k_samples=16, seed=0, refit_async=True,
+                            refit_retries=0)
+    ctl.seed_window(trace[-40:])
+    ctl.resize(6)
+    ctl._refit_job = (_finished_thread(),
+                      {"error": RuntimeError("boom")},
+                      ctl._resize_count - 1)
+    ctl._poll_refit()                      # would raise if not stale
+    assert ctl._refit_failures == 0 and ctl.mode == "fallback"
 
 
 # ---------------------------------------------------------------------------

@@ -15,8 +15,9 @@ import numpy as np
 import pytest
 
 from repro.cluster.simulator import paper_cluster_158
-from repro.core.controller import (CutoffController, _batched_impute_keys,
-                                   _impute_key, stacked_prng_keys)
+from repro.core.controller import (CutoffController, RefitError,
+                                   _batched_impute_keys, _impute_key,
+                                   stacked_prng_keys)
 from repro.core.cutoff import order_stats
 from repro.core.runtime_model.api import RuntimeModel, stack_models
 from repro.ps import PSServer
@@ -249,6 +250,55 @@ def test_resize_without_model_degrades_then_refits(fitted_16):
     assert all(1 <= c <= 12 for c in seq)
     assert h.mode == "dmm", "refit should have rejoined the batched path"
     assert h.job.model.n_workers == 12
+
+
+def test_ps_refit_failure_retries_with_backoff_then_recovers(fitted_16,
+                                                             monkeypatch):
+    """A failed async refit is logged and retried once the doubled
+    fresh-row backoff is met; a later success clears the failure count
+    and rejoins the batched path."""
+    rm, trace = fitted_16
+    srv = PSServer(refit_steps=30, refit_fresh=3, refit_async=True,
+                   refit_retries=1)
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    h.resize(12, col_map=np.arange(12))
+    real, calls = srv._fit_model, {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("ELBO diverged")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(srv, "_fit_model", flaky)
+    _drive(h, paper_cluster_158(seed=6, n_workers=12), 3, flush=srv.flush)
+    srv.wait_refits()                     # first fit fails: logged only
+    assert h.mode == "fallback" and h.job.refit_failures == 1
+    _drive(h, paper_cluster_158(seed=7, n_workers=12), 3, flush=srv.flush)
+    assert h.job.refit_task is None       # 3 fresh < 6 needed under backoff
+    _drive(h, paper_cluster_158(seed=8, n_workers=12), 3, flush=srv.flush)
+    srv.wait_refits()                     # retry spawned at 2x fresh, wins
+    assert h.mode == "dmm" and h.job.refit_failures == 0
+    assert calls["n"] == 2
+
+
+def test_ps_refit_failure_past_budget_raises_naming_job(fitted_16,
+                                                        monkeypatch):
+    """Past the retry budget the failure surfaces as RefitError naming
+    the job — from the server's poll, never lost on the fit thread."""
+    rm, trace = fitted_16
+    srv = PSServer(refit_steps=30, refit_fresh=2, refit_async=True,
+                   refit_retries=0)
+    h = srv.admit("a", rm, window=trace, k_samples=16, seed=0)
+    h.resize(12, col_map=np.arange(12))
+
+    def boom(*a, **kw):
+        raise RuntimeError("ELBO diverged")
+
+    monkeypatch.setattr(srv, "_fit_model", boom)
+    _drive(h, paper_cluster_158(seed=6, n_workers=12), 2, flush=srv.flush)
+    with pytest.raises(RefitError, match="job 'a'"):
+        srv.wait_refits()
 
 
 def test_resize_same_width_is_a_noop(fitted_16):

@@ -54,6 +54,14 @@ def test_mask_agg_paths_equivalent_on_mesh():
     _run_check([_check_path("mask_agg_check.py")], timeout=900)
 
 
+@pytest.mark.sharded
+def test_controlplane_subprocess_crash_drill():
+    """Real kill -9 / hang / flaky restart against subprocess workers:
+    detection within deadline + 1 tick, hung incarnation killed before
+    restart, warm ctl-group recovery by global worker id."""
+    _run_check([_check_path("controlplane_drill_check.py")], timeout=600)
+
+
 @pytest.mark.slow
 @pytest.mark.sharded
 def test_perf_knobs_preserve_numerics():
