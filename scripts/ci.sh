@@ -13,6 +13,8 @@
 #   scripts/ci.sh --drill    # live fault drills: subprocess kill -9 /
 #                            # hang / flaky restart + the supervised
 #                            # trainer storm with scripted-replay check
+#   scripts/ci.sh --lint     # reprolint --strict over src+tests, then
+#                            # the jaxpr audit -> ANALYSIS.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -85,6 +87,15 @@ if not winners:
     sys.exit(1)
 print(f"frontier gate ok: {', '.join(winners)} beat sync", file=sys.stderr)
 EOF
+    exit 0
+fi
+
+if [[ "${1:-}" == "--lint" ]]; then
+    shift
+    # contract lint: any finding (or a reasonless suppression) fails CI
+    python -m repro.analysis src tests --strict "$@"
+    # device-side proof: hot entries trace transfer-free, donation holds
+    python -m repro.analysis --audit
     exit 0
 fi
 

@@ -1,0 +1,23 @@
+"""repro.analysis: the contract linter (reprolint) + jaxpr auditor.
+
+Static enforcement of the hot-path invariants the throughput story
+rests on.  Run it as::
+
+    python -m repro.analysis src tests --strict        # lint
+    python -m repro.analysis --audit                   # -> ANALYSIS.json
+
+See ``src/repro/analysis/README.md`` for the rule catalog.
+"""
+from repro.analysis.core import (Finding, Project, Rule, discover,
+                                 render_json, render_text, run_rules)
+from repro.analysis.rules import all_rules, rule_ids
+
+__all__ = ["Finding", "Project", "Rule", "discover", "render_json",
+           "render_text", "run_rules", "all_rules", "rule_ids",
+           "lint_paths"]
+
+
+def lint_paths(paths, root=None, rules=None):
+    """Lint ``paths`` and return the (suppression-filtered) findings."""
+    project = discover(paths, root=root, known_rules=rule_ids())
+    return run_rules(project, rules if rules is not None else all_rules())

@@ -1,0 +1,67 @@
+"""CLI: ``python -m repro.analysis [paths...] [options]``.
+
+Exit codes: 0 clean (or advisory mode), 1 findings under ``--strict``
+(or a failed audit), 2 usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: contract linter + jaxpr auditor")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src tests)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding (CI mode; default is "
+                         "report-only)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="RULE", help="run only these rule ids")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the jaxpr audit instead of linting")
+    ap.add_argument("--out", default="ANALYSIS.json",
+                    help="audit report path (with --audit)")
+    args = ap.parse_args(argv)
+
+    if args.audit:
+        from repro.analysis.jaxpr_audit import write_report
+
+        report = write_report(args.out)
+        for e in report["entries"]:
+            ok = e["transfer_free"] and e["donation"]["effective"]
+            status = "ok" if ok else "FAIL"
+            print(f"audit {status}: {e['name']}: {e['n_eqns']} eqns, "
+                  f"forbidden={e['forbidden_primitives']}, "
+                  f"aliased_outputs="
+                  f"{e['donation']['n_aliased_outputs']}")
+        print(f"wrote {args.out}")
+        return 0 if report["ok"] else 1
+
+    from repro.analysis import all_rules, lint_paths, render_json, \
+        render_text, rule_ids
+
+    rules = all_rules()
+    if args.select:
+        known = rule_ids()
+        bad = [r for r in args.select if r not in known]
+        if bad:
+            print(f"unknown rule(s): {', '.join(bad)}", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in set(args.select)]
+    paths = args.paths or ["src", "tests"]
+    findings = lint_paths(paths, rules=rules)
+    if args.format == "json":
+        sys.stdout.write(render_json(findings, {"paths": paths}))
+    else:
+        print(render_text(findings))
+    if findings and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""Jaxpr auditor: trace-compile the hot entry points, never execute.
+
+The lint rules prove the HOST side of the hot-path contract; this
+module proves the DEVICE side.  Each registered entry point is lowered
+ahead-of-time from ``ShapeDtypeStruct``s (no real buffers, nothing
+runs) and its closed jaxpr is scanned recursively — pjit/scan/while/
+cond sub-jaxprs included — for primitives that would smuggle a host
+round-trip into the compiled program (callbacks, infeed/outfeed,
+explicit transfers).  For donating entries the lowered MLIR must carry
+``tf.aliasing_output`` on the donated operands: donation that silently
+fell off (a dtype mismatch, a shape change) doubles peak memory per
+step without any visible failure.
+
+Entries:
+
+* ``fused_observe_decide`` — the single-job hot dispatch
+  (``core.controller._fused_observe_decide``, censored mode);
+* ``batched_observe_decide_ragged`` — the multi-tenant tick at a mixed
+  width (J=3, widths 4/6/8 padded to 8);
+* ``train_step[mask_agg=weights]`` / ``train_step[mask_agg=psum]`` —
+  both aggregation paths of the donated train step on the tiny bench
+  config.
+
+``run_audit`` returns the report dict and ``write_report`` pins it to
+``ANALYSIS.json`` (schema-guarded by ``tests/test_lint_clean.py``).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Tuple
+
+SCHEMA_VERSION = 1
+
+#: primitive-name substrings that mean "this program talks to the host"
+FORBIDDEN_SUBSTRINGS = ("callback", "infeed", "outfeed", "device_put",
+                        "host_local", "copy_to_host")
+
+
+def _sds_like(tree):
+    import jax
+
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _iter_jaxprs(jaxpr) -> Iterable:
+    """Yield a jaxpr and every sub-jaxpr reachable through eqn params."""
+    try:
+        from jax.extend.core import Jaxpr  # type: ignore
+    except ImportError:                    # older jax
+        from jax.core import Jaxpr  # type: ignore
+
+    stack = [jaxpr]
+    seen = set()
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:
+            continue
+        seen.add(id(j))
+        yield j
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                for cand in (v if isinstance(v, (list, tuple)) else (v,)):
+                    inner = getattr(cand, "jaxpr", cand)
+                    if isinstance(inner, Jaxpr):
+                        stack.append(inner)
+
+
+def scan_jaxpr(closed_jaxpr) -> Tuple[int, List[str]]:
+    """(total eqn count, sorted forbidden primitive names) over the
+    whole jaxpr tree."""
+    bad = set()
+    count = 0
+    for j in _iter_jaxprs(closed_jaxpr.jaxpr):
+        for eqn in j.eqns:
+            count += 1
+            name = eqn.primitive.name
+            if any(s in name for s in FORBIDDEN_SUBSTRINGS):
+                bad.add(name)
+    return count, sorted(bad)
+
+
+def _audit_lowered(name: str, jitted, args, kwargs=None, *,
+                   expect_donation: bool) -> Dict:
+    import jax
+
+    kwargs = kwargs or {}
+    traced = jitted.trace(*args, **kwargs)
+    n_eqns, bad = scan_jaxpr(traced.jaxpr)
+    lowered = traced.lower()
+    mlir = lowered.as_text()
+    n_aliased = mlir.count("tf.aliasing_output")
+    return {
+        "name": name,
+        "n_eqns": n_eqns,
+        "forbidden_primitives": bad,
+        "transfer_free": not bad,
+        "donation": {
+            "expected": expect_donation,
+            "n_aliased_outputs": n_aliased,
+            "effective": (n_aliased > 0) if expect_donation else True,
+        },
+    }
+
+
+# -- entry builders ---------------------------------------------------------
+
+
+def _fused_entry() -> Dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import controller as C
+
+    n, lag, k = 8, 4, 16
+    model = C.RuntimeModel(n_workers=n, lag=lag)
+    model.init(0)
+    params = _sds_like(model.params)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    obs = {"times": f32(n), "mask": jax.ShapeDtypeStruct((n,), np.bool_),
+           "mu": f32(n), "std": f32(n),
+           "key": jax.ShapeDtypeStruct((2,), np.uint32)}
+    args = (params, f32(lag + 1, n), jax.ShapeDtypeStruct((), jnp.int32),
+            obs, jax.ShapeDtypeStruct((2,), np.uint32), f32())
+    return _audit_lowered(
+        "fused_observe_decide", C._fused_observe_decide, args,
+        {"mode": "censored", "k_samples": k, "lo": 1},
+        expect_donation=False)
+
+
+def _ragged_entry() -> Dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import controller as C
+    from repro.core.runtime_model.api import stack_models_padded
+
+    widths, n_pad, lag, k = (4, 6, 8), 8, 4, 16
+    J = len(widths)
+    models = []
+    for i, w in enumerate(widths):
+        m = C.RuntimeModel(n_workers=w, lag=lag)
+        m.init(i)
+        models.append(m)
+    stacked, _scales = stack_models_padded(models, n_pad)
+    params = _sds_like(stacked)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    obs = {"times": f32(J, n_pad),
+           "mask": jax.ShapeDtypeStruct((J, n_pad), np.bool_),
+           "mu": f32(J, n_pad), "std": f32(J, n_pad),
+           "key": jax.ShapeDtypeStruct((J, 2), np.uint32),
+           "cen": jax.ShapeDtypeStruct((J,), np.bool_)}
+    args = (params, f32(J, lag + 1, n_pad), i32(J), obs,
+            jax.ShapeDtypeStruct((J, 2), np.uint32), f32(J), i32(J),
+            i32(J))
+    return _audit_lowered(
+        "batched_observe_decide_ragged", C._batched_observe_decide_ragged,
+        args, {"k_samples": k}, expect_donation=False)
+
+
+def _train_entries() -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import optim
+    from repro.configs.base import bench_tiny_config
+    from repro.launch.train import jit_train_step
+    from repro.models import model as M
+
+    cfg = bench_tiny_config()
+    opt = optim.adamw(1e-3)
+    state_sds = jax.eval_shape(lambda: (lambda p: {
+        "params": p, "opt": opt.init(p)})(
+            M.init_model(cfg, jax.random.PRNGKey(0))))
+    B, S, W = 8, 8, 4
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    out = []
+    for mode, extra in (("weights", {"weights": f32(B)}),
+                        ("psum", {"mask": f32(W)})):
+        batch = dict(tokens=tok, labels=tok, positions=tok, **extra)
+        step = jit_train_step(cfg, opt, mask_agg=mode)
+        out.append(_audit_lowered(
+            f"train_step[mask_agg={mode}]", step, (state_sds, batch),
+            expect_donation=True))
+    return out
+
+
+def run_audit() -> Dict:
+    import jax
+
+    entries = [_fused_entry(), _ragged_entry()] + _train_entries()
+    ok = all(e["transfer_free"] and e["donation"]["effective"]
+             for e in entries)
+    return {"version": SCHEMA_VERSION,
+            "jax_version": jax.__version__,
+            "ok": ok,
+            "entries": entries}
+
+
+def write_report(path: str = "ANALYSIS.json") -> Dict:
+    report = run_audit()
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+    return report

@@ -1,0 +1,115 @@
+"""colwise-rng: width-shaped draws must be column-wise.
+
+A block draw like ``jax.random.normal(key, (K, n))`` consumes the
+threefry counter stream in row-major order, so the same key at width n
+and padded width n_pad > n yields DIFFERENT values in the shared
+columns — a padded bucket job could never reproduce its standalone
+controller's samples, breaking the ragged dispatch's bit-exactness
+guarantee (PR 6).  Every width-shaped draw on the decision/imputation
+path must route through ``api.colwise_normal`` / ``api.colwise_uniform``
+(column i a function of (key, i) alone).
+
+Heuristic: flag raw ``jax.random.normal/uniform/truncated_normal``
+calls whose shape expression references a width-like name (``n``,
+``width``, ``n_workers``, ``n_pad``, ...) or ``<width-carrier>.shape``.
+Draws shaped by latent dims (``(k_samples, zd)``) are allowed — they
+are per-sample, not per-worker.  Scope: functions reachable from the
+hot roots (the decision path) plus every jit body; model/param init is
+out of scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional, Set
+
+from repro.analysis.core import Finding, Project, Rule, dotted_name
+from repro.analysis.callgraph import _walk_own_scope
+
+RAW_DRAWS = {"normal", "uniform", "truncated_normal"}
+WIDTH_NAMES = {"n", "width", "n_workers", "n_pad", "n_real", "n_max",
+               "n_cols", "ring_width"}
+WIDTH_CARRIERS = {"times", "ring", "rings", "window", "mask", "obs",
+                  "x_next", "samples", "emu", "estd", "x_window", "xw"}
+
+
+def _is_raw_draw(call: ast.Call, mod) -> Optional[str]:
+    """The draw name if ``call`` is a raw jax.random sampler."""
+    d = dotted_name(call.func)
+    if d is None:
+        return None
+    parts = d.split(".")
+    fn = parts[-1]
+    if fn not in RAW_DRAWS:
+        return None
+    if d in (f"jax.random.{fn}",):
+        return d
+    # import jax.random as jr / from jax import random [as r]
+    if len(parts) == 2:
+        base = parts[0]
+        if mod.mod_aliases.get(base) == "jax.random":
+            return d
+        fi = mod.from_imports.get(base)
+        if fi == ("jax", "random"):
+            return d
+    # from jax.random import normal [as nm]
+    if len(parts) == 1:
+        fi = mod.from_imports.get(fn)
+        if fi is not None and fi[0] == "jax.random" and fi[1] in RAW_DRAWS:
+            return d
+    return None
+
+
+def _shape_arg(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "shape":
+            return kw.value
+    if len(call.args) >= 2:
+        return call.args[1]
+    return None
+
+
+def _width_ref(shape: ast.AST) -> Optional[str]:
+    for n in ast.walk(shape):
+        if isinstance(n, ast.Name) and n.id in WIDTH_NAMES:
+            return n.id
+        if isinstance(n, ast.Attribute):
+            if n.attr in WIDTH_NAMES:
+                return dotted_name(n) or n.attr
+            if (n.attr == "shape" and isinstance(n.value, ast.Name)
+                    and n.value.id in WIDTH_CARRIERS):
+                return f"{n.value.id}.shape"
+    return None
+
+
+class ColwiseRng(Rule):
+    id = "colwise-rng"
+    doc = ("decision/imputation paths draw via api.colwise_normal/"
+           "colwise_uniform, never width-shaped raw jax.random.*")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        g = project.callgraph
+        hot = g.reachable(g.hot_roots())
+        for key in sorted(hot):
+            info = g.funcs[key]
+            rel = key[0]
+            if rel.endswith("runtime_model/api.py"):
+                continue        # the colwise implementation itself
+            mod = g.modules[rel]
+            for n in _walk_own_scope(info.node):
+                if not isinstance(n, ast.Call):
+                    continue
+                draw = _is_raw_draw(n, mod)
+                if draw is None:
+                    continue
+                shape = _shape_arg(n)
+                if shape is None:
+                    continue
+                ref = _width_ref(shape)
+                if ref is not None:
+                    fn = draw.split(".")[-1]
+                    yield Finding(
+                        rel, n.lineno, n.col_offset, self.id,
+                        f"raw `{draw}` shaped by `{ref}` in "
+                        f"`{key[1]}`: width-shaped draws are not stable "
+                        f"under padding — use `api.colwise_{fn}` so "
+                        f"column i depends only on (key, i)")

@@ -1,0 +1,216 @@
+"""donation-after-use: a donated buffer is CONSUMED at the call site.
+
+``jit_train_step`` donates argument 0 (the train state) so params and
+optimizer moments update in place.  XLA is then free to alias the
+output over the input buffer — any later read of the name that was
+passed at a donated position observes garbage (or raises, backend
+permitting).  The contract is rebind-and-forget:
+
+    state, metrics = step(state, batch)      # OK: rebound same statement
+    new, metrics = step(state, batch)
+    loss_of(state)                           # BAD: state was donated
+
+The pass is a per-scope, statement-ordered dataflow: donating callables
+are collected first (``jax.jit(..., donate_argnums=...)`` bindings in
+the same module or scope, plus ``jit_train_step(...)`` which donates
+position 0 unless built with ``donate=False``), then each statement
+(1) checks reads against the dead set, (2) kills names passed at
+donated positions, (3) revives names (re)bound by the statement.
+Findings therefore depend only on the def-use order of statements, not
+their absolute positions — permuting independent statements never
+changes the outcome (pinned by a hypothesis property in the tests).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, Project, Rule, const_int_elems,
+                                 dotted_name)
+
+
+def _donated_positions(call: ast.Call) -> Optional[Set[int]]:
+    """Donated arg positions if ``call`` is ``jax.jit(...)``/``jit(...)``
+    with a literal ``donate_argnums``, else None."""
+    if dotted_name(call.func) not in ("jax.jit", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            val = kw.value
+            # the repo idiom: donate_argnums=(0,) if donate else ()
+            if isinstance(val, ast.IfExp):
+                pos = const_int_elems(val.body)
+                return set(pos) if pos else set()
+            pos = const_int_elems(val)
+            return set(pos) if pos is not None else set()
+    return set()        # jax.jit with no donation
+
+
+def _is_jit_train_step(call: ast.Call) -> Optional[Set[int]]:
+    """``jit_train_step(...)`` donates position 0 unless donate=False."""
+    d = dotted_name(call.func)
+    if d is None or d.split(".")[-1] != "jit_train_step":
+        return None
+    for kw in call.keywords:
+        if (kw.arg == "donate"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is False):
+            return set()
+    return {0}
+
+
+def _binding_name(target: ast.AST) -> Optional[str]:
+    return dotted_name(target)
+
+
+class _Scope:
+    """One function (or module) body, analyzed statement by statement."""
+
+    def __init__(self, rule: Rule, rel: str,
+                 body: Sequence[ast.stmt],
+                 inherited: Dict[str, Set[int]]):
+        self.rule = rule
+        self.rel = rel
+        self.body = body
+        # callable name -> donated positions
+        self.donors: Dict[str, Set[int]] = dict(inherited)
+        self.dead: Dict[str, Tuple[int, str]] = {}   # name -> (line, callee)
+        self.findings: List[Finding] = []
+
+    # -- helpers -------------------------------------------------------
+
+    def _collect_donor_bindings(self) -> None:
+        for stmt in self._statements():
+            if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                continue
+            name = _binding_name(stmt.targets[0])
+            if name is None or not isinstance(stmt.value, ast.Call):
+                continue
+            pos = _donated_positions(stmt.value)
+            if pos is None:
+                pos = _is_jit_train_step(stmt.value)
+            if pos:
+                self.donors[name] = pos
+
+    def _statements(self) -> Iterable[ast.stmt]:
+        """Flatten compound statements, skipping nested def/class."""
+        stack: List[ast.stmt] = list(self.body)[::-1]
+        while stack:
+            s = stack.pop()
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            yield s
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(s, field, None)
+                if sub:
+                    stack.extend(reversed(sub))
+            for h in getattr(s, "handlers", []) or []:
+                stack.extend(reversed(h.body))
+
+    def _donating_calls(self, stmt: ast.stmt):
+        # NOTE: only calls of BOUND donor names donate.  The builder
+        # calls themselves (``jax.jit(f, donate_argnums=...)``,
+        # ``jit_train_step(cfg, ...)``) consume nothing — they return
+        # the callable whose future calls do.
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call):
+                callee = dotted_name(n.func)
+                if callee in self.donors:
+                    yield n, callee, self.donors[callee]
+
+    def _stores(self, stmt: ast.stmt) -> Set[str]:
+        out: Set[str] = set()
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        elif isinstance(stmt, ast.For):
+            targets = [stmt.target]
+        elif isinstance(stmt, ast.With):
+            targets = [i.optional_vars for i in stmt.items
+                       if i.optional_vars is not None]
+        elif isinstance(stmt, ast.Delete):
+            targets = list(stmt.targets)
+        for t in targets:
+            for n in ast.walk(t):
+                d = dotted_name(n)
+                if d:
+                    out.add(d)
+        return out
+
+    def _reads(self, stmt: ast.stmt) -> Iterable[Tuple[str, ast.AST]]:
+        skip: Set[int] = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for n in ast.walk(t):
+                    skip.add(id(n))
+        for n in ast.walk(stmt):
+            if id(n) in skip:
+                continue
+            if isinstance(n, (ast.Name, ast.Attribute)):
+                if isinstance(getattr(n, "ctx", None), ast.Load):
+                    d = dotted_name(n)
+                    if d:
+                        yield d, n
+
+    # -- the pass ------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._collect_donor_bindings()
+        for stmt in self._statements():
+            # 1) reads of dead names
+            flagged: Set[str] = set()
+            for name, node in self._reads(stmt):
+                hit = None
+                if name in self.dead:
+                    hit = name
+                else:
+                    # reading an attribute of a dead chain, or a dead
+                    # attribute via its chain prefix
+                    for dn in self.dead:
+                        if name.startswith(dn + "."):
+                            hit = dn
+                            break
+                if hit and hit not in flagged:
+                    flagged.add(hit)
+                    line, callee = self.dead[hit]
+                    self.findings.append(Finding(
+                        self.rel, node.lineno, node.col_offset, self.rule.id,
+                        f"`{name}` is read after being donated to "
+                        f"`{callee}` on line {line}; a donated buffer may "
+                        f"be aliased by its output — rebind the result "
+                        f"and drop the old name"))
+            # 2) kills: names at donated positions
+            for call, callee, positions in self._donating_calls(stmt):
+                for i in positions:
+                    if i < len(call.args):
+                        d = dotted_name(call.args[i])
+                        if d:
+                            self.dead[d] = (call.lineno, callee)
+            # 3) revives: (re)bindings
+            for name in self._stores(stmt):
+                self.dead.pop(name, None)
+                stale = [k for k in self.dead if k.startswith(name + ".")]
+                for k in stale:
+                    self.dead.pop(k)
+        return self.findings
+
+
+class DonationAfterUse(Rule):
+    id = "donation-after-use"
+    doc = ("a name passed at a donate_argnums position may not be read "
+           "afterwards in the same scope")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            module_scope = _Scope(self, f.rel, f.tree.body, {})
+            yield from module_scope.run()
+            module_donors = module_scope.donors
+            for node in ast.walk(f.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield from _Scope(self, f.rel, node.body,
+                                      module_donors).run()

@@ -1,0 +1,85 @@
+"""event-kind-drift: the event vocabulary has exactly one source of
+truth.
+
+``controlplane/events.py`` declares ``EVENT_KINDS``; ``EventLog.emit``
+validates against it at runtime.  Drift still creeps in two ways that
+runtime validation cannot catch: (a) an emit site with a NEW literal
+kind that was never registered only explodes when that code path runs
+(often mid-drill), and (b) a registered kind nobody emits anymore is
+dead vocabulary that dashboards and drills keep matching on.  This rule
+closes both directions statically: every literal ``kind`` at an
+``*.emit(tick, kind, ...)`` call site must be registered, and every
+registered kind must appear at some emit site in the linted tree.
+Dynamic kinds (``log.emit(tick, ev.kind, ...)``) are skipped — the
+runtime check owns those.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Project, Rule, const_str_elems
+
+REGISTRY_NAME = "EVENT_KINDS"
+
+
+class EventKindDrift(Rule):
+    id = "event-kind-drift"
+    doc = ("every literal kind= emitted anywhere appears in the "
+           "EVENT_KINDS registry, and vice versa")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        registry: Optional[Set[str]] = None
+        reg_where: Tuple[str, int] = ("", 0)
+        kind_lines: Dict[str, int] = {}
+        emits: List[Tuple[str, int, int, str]] = []
+        for f in project.files:
+            if f.tree is None:
+                continue
+            for node in ast.walk(f.tree):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == REGISTRY_NAME):
+                    kinds = const_str_elems(node.value)
+                    if kinds is not None:
+                        registry = set(kinds)
+                        reg_where = (f.rel, node.lineno)
+                        if isinstance(node.value, (ast.Tuple, ast.List)):
+                            for e in node.value.elts:
+                                kind_lines[e.value] = e.lineno
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                if not (isinstance(fn, ast.Attribute) and fn.attr == "emit"):
+                    continue
+                kind_node: Optional[ast.AST] = None
+                if len(node.args) >= 2:
+                    kind_node = node.args[1]
+                for kw in node.keywords:
+                    if kw.arg == "kind":
+                        kind_node = kw.value
+                if (isinstance(kind_node, ast.Constant)
+                        and isinstance(kind_node.value, str)):
+                    emits.append((f.rel, node.lineno, node.col_offset,
+                                  kind_node.value))
+        if registry is None:
+            return
+        emitted = {k for _, _, _, k in emits}
+        for rel, line, col, kind in emits:
+            if kind not in registry:
+                yield Finding(
+                    rel, line, col, self.id,
+                    f"emit of unregistered kind '{kind}': add it to "
+                    f"{REGISTRY_NAME} in {reg_where[0]} (or fix the typo) "
+                    f"— the runtime check would reject this at drill "
+                    f"time, not review time")
+        if emits:
+            for kind in sorted(registry - emitted):
+                yield Finding(
+                    reg_where[0], kind_lines.get(kind, reg_where[1]),
+                    0, self.id,
+                    f"registered kind '{kind}' is never emitted with a "
+                    f"literal anywhere in the linted tree: dead "
+                    f"vocabulary, or an emit site the registry has "
+                    f"drifted from")

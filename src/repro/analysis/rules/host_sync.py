@@ -1,0 +1,189 @@
+"""host-sync-in-hot-path: no host/device synchronization on hot paths.
+
+The paper's controller only wins if its decision overlaps worker
+compute: every op between dispatch and the single scalar fetch must stay
+async.  This rule takes the call graph's hot roots
+(``CutoffController.observe``, ``PSServer.flush``, ``Supervisor.tick``,
+every jitted body, and anything marked ``# reprolint: hot-path``),
+computes reachability, and flags inside that set:
+
+* unconditionally: ``.item()``, ``.block_until_ready()``,
+  ``.copy_to_host_async()``, ``jax.device_get`` / ``jax.device_put`` —
+  these ARE transfers, whatever their argument;
+* conversions — ``float()`` / ``int()`` / ``bool()`` /
+  ``np.asarray()`` / ``np.array()`` — only when the argument is
+  *device-tainted*: derived from a ``jnp.*``/``jax.*`` call, a call to
+  a jit-wrapped function, or (inside a jit body) any traced parameter.
+  Host-side bookkeeping like ``int(tick)`` on the supervisor path never
+  flags.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Project, Rule, dotted_name
+from repro.analysis.callgraph import _walk_own_scope
+
+UNCONDITIONAL_ATTRS = {"item", "block_until_ready", "copy_to_host_async"}
+UNCONDITIONAL_CALLS = {"jax.device_get", "jax.device_put"}
+CONVERSION_BUILTINS = {"float", "int", "bool"}
+NUMPY_CONVERSIONS = {"asarray", "array"}
+
+
+def _ref_names(expr: ast.AST) -> Set[str]:
+    """Every Name / dotted-attribute chain referenced in ``expr``."""
+    out: Set[str] = set()
+    for n in ast.walk(expr):
+        d = dotted_name(n)
+        if d:
+            out.add(d)
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out
+
+
+class _FnScanner:
+    """Per-function taint pass + sync-op scan."""
+
+    def __init__(self, rule, project, mod, info, numpy_aliases,
+                 device_names, origin):
+        self.rule = rule
+        self.project = project
+        self.mod = mod
+        self.info = info
+        self.numpy_aliases = numpy_aliases
+        self.device_names = device_names
+        self.origin = origin
+        self.tainted: Set[str] = set()
+        if info.is_jit:
+            args = info.node.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                self.tainted.add(a.arg)
+            if args.vararg:
+                self.tainted.add(args.vararg.arg)
+
+    def _is_taint_source(self, node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        d = dotted_name(node.func)
+        if d is None:
+            return False
+        if d in UNCONDITIONAL_CALLS:        # device_get returns HOST data
+            return False
+        root = d.split(".")[0]
+        if root in ("jnp", "jax") and "." in d:
+            return True
+        if d in self.device_names:
+            return True
+        # self.method() where the method is jitted or touches jax
+        if root == "self" and d.count(".") == 1:
+            cls = self.info.key[1].split(".")[0]
+            attr = d.split(".")[1]
+            if (cls, attr) in self.mod.jit_attrs:
+                return True
+            m = self.mod.funcs.get(cls + "." + attr)
+            if m is not None and (m.is_jit or m.uses_jax):
+                return True
+        return False
+
+    def _expr_tainted(self, expr: ast.AST) -> bool:
+        if _ref_names(expr) & self.tainted:
+            return True
+        for n in ast.walk(expr):
+            if self._is_taint_source(n):
+                return True
+        return False
+
+    def _propagate(self) -> None:
+        assigns: List[Tuple[int, ast.AST, ast.AST]] = []
+        for n in _walk_own_scope(self.info.node):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    assigns.append((n.lineno, t, n.value))
+            elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+                if n.value is not None:
+                    assigns.append((n.lineno, n.target, n.value))
+        assigns.sort(key=lambda x: x[0])
+        # two passes ~= fixpoint for loop-carried taint
+        for _ in range(2):
+            changed = False
+            for _, target, value in assigns:
+                if not self._expr_tainted(value):
+                    continue
+                for t in ast.walk(target):
+                    d = dotted_name(t)
+                    if d and d not in self.tainted:
+                        self.tainted.add(d)
+                        changed = True
+            if not changed:
+                break
+
+    def scan(self) -> Iterable[Finding]:
+        self._propagate()
+        rel = self.info.key[0]
+        where = (f"`{self.info.key[1]}` (hot via {self.origin})"
+                 if self.origin != self.info.key[1]
+                 else f"`{self.info.key[1]}`")
+        for n in _walk_own_scope(self.info.node):
+            if not isinstance(n, ast.Call):
+                continue
+            d = dotted_name(n.func)
+            if (isinstance(n.func, ast.Attribute)
+                    and n.func.attr in UNCONDITIONAL_ATTRS
+                    and not n.args):
+                yield Finding(
+                    rel, n.lineno, n.col_offset, self.rule.id,
+                    f"`.{n.func.attr}()` in {where} forces a host/device "
+                    f"sync on the hot path")
+                continue
+            if d in UNCONDITIONAL_CALLS:
+                yield Finding(
+                    rel, n.lineno, n.col_offset, self.rule.id,
+                    f"`{d}` in {where}: explicit transfer on the hot path")
+                continue
+            conv = None
+            if (isinstance(n.func, ast.Name)
+                    and n.func.id in CONVERSION_BUILTINS):
+                conv = n.func.id
+            elif (isinstance(n.func, ast.Attribute)
+                    and n.func.attr in NUMPY_CONVERSIONS
+                    and isinstance(n.func.value, ast.Name)
+                    and n.func.value.id in self.numpy_aliases):
+                conv = f"{n.func.value.id}.{n.func.attr}"
+            if conv and n.args and self._expr_tainted(n.args[0]):
+                yield Finding(
+                    rel, n.lineno, n.col_offset, self.rule.id,
+                    f"`{conv}(...)` of a device value in {where} blocks "
+                    f"on the accelerator; keep it async or fetch once at "
+                    f"the designated drain point")
+
+
+class HostSyncInHotPath(Rule):
+    id = "host-sync-in-hot-path"
+    doc = ("no .item()/float()/int()/np.asarray/block_until_ready "
+           "reachable from the hot roots")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        g = project.callgraph
+        roots = g.hot_roots()
+        # provenance: nearest root a function was first reached from
+        origin: Dict[Tuple[str, str], str] = {}
+        stack = []
+        for r in sorted(roots):
+            origin[r] = g.funcs[r].key[1]
+            stack.append(r)
+        while stack:
+            k = stack.pop()
+            for t in sorted(g.edges.get(k, ())):
+                if t not in origin:
+                    origin[t] = origin[k]
+                    stack.append(t)
+        for key in sorted(origin):
+            info = g.funcs[key]
+            mod = g.modules[key[0]]
+            numpy_aliases = {a for a, m in mod.mod_aliases.items()
+                             if m == "numpy"}
+            device_names = g.device_returning_names(project, key[0])
+            yield from _FnScanner(self, project, mod, info, numpy_aliases,
+                                  device_names, origin[key]).scan()

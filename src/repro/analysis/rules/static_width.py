@@ -1,0 +1,101 @@
+"""static-argnum-width: job width must enter jits TRACED, not static.
+
+PR 6's recompile hazard: making a per-job width (or the argmax floor
+``lo``) a static argnum compiles one program per distinct width — a
+mixed-width multi-tenant tick then pays J compilations and J dispatch
+caches where the ragged contract promises ONE.  Widths enter as traced
+operands with in-jit masks (``_batched_observe_decide_ragged`` keeps
+only ``k_samples`` static).
+
+The rule flags width-like names (``n``, ``width``, ``n_workers``,
+``lo``, ``n_pad``, ...) in ``static_argnames`` literals, and resolves
+``static_argnums`` indices against the decorated function's parameter
+list.  The single-job fast path deliberately keeps ``lo`` static
+(recompiles only on elastic resize, never per tick) — that site carries
+a pragma explaining exactly that.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional
+
+from repro.analysis.core import (Finding, Project, Rule, const_int_elems,
+                                 const_str_elems, dotted_name)
+
+WIDTH_NAMES = {"n", "width", "n_workers", "lo", "n_pad", "n_real",
+               "n_max", "n_cols"}
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """The jax.jit(...) call inside a decorator/expression, if any."""
+    if not isinstance(node, ast.Call):
+        return None
+    d = dotted_name(node.func)
+    if d in ("jax.jit", "jit"):
+        return node
+    if d in ("functools.partial", "partial") and node.args:
+        if dotted_name(node.args[0]) in ("jax.jit", "jit"):
+            return node
+    return None
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [x.arg for x in a.posonlyargs + a.args]
+
+
+class StaticArgnumWidth(Rule):
+    id = "static-argnum-width"
+    doc = "job width/lo must enter jits traced, not static"
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for f in project.files:
+            if f.tree is None:
+                continue
+            module_fns: Dict[str, ast.AST] = {
+                n.name: n for n in ast.walk(f.tree)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+            for node in ast.walk(f.tree):
+                call = _jit_call(node)
+                if call is None:
+                    continue
+                # the function whose params static_argnums index into
+                target: Optional[ast.AST] = None
+                for fn in module_fns.values():
+                    if node in fn.decorator_list:
+                        target = fn
+                        break
+                if target is None and call.args:
+                    first = call.args[-1] if dotted_name(
+                        call.func) in ("functools.partial",
+                                       "partial") else call.args[0]
+                    name = dotted_name(first)
+                    if name in module_fns:
+                        target = module_fns[name]
+                for kw in call.keywords:
+                    if kw.arg == "static_argnames":
+                        names = const_str_elems(kw.value) or []
+                        for s in names:
+                            if s in WIDTH_NAMES:
+                                yield Finding(
+                                    f.rel, kw.value.lineno,
+                                    kw.value.col_offset, self.id,
+                                    f"static_argnames includes width-like "
+                                    f"`{s}`: one compilation per distinct "
+                                    f"value — pass it traced with an "
+                                    f"in-jit mask (the PR 6 ragged "
+                                    f"contract)")
+                    elif kw.arg == "static_argnums" and target is not None:
+                        idxs = const_int_elems(kw.value) or []
+                        params = _param_names(target)
+                        for i in idxs:
+                            if 0 <= i < len(params) \
+                                    and params[i] in WIDTH_NAMES:
+                                yield Finding(
+                                    f.rel, kw.value.lineno,
+                                    kw.value.col_offset, self.id,
+                                    f"static_argnums={i} pins width-like "
+                                    f"parameter `{params[i]}` of "
+                                    f"`{target.name}`: one compilation "
+                                    f"per distinct value — pass it "
+                                    f"traced with an in-jit mask")

@@ -154,6 +154,7 @@ class FaultInjector:
             return None
         path = os.path.join(d, names[int(self.rng.integers(len(names)))])
         size = os.path.getsize(path)
+        # reprolint: disable=nonatomic-checkpoint-write -- deliberate corruption: this injector exists to flip bits in published checkpoints so recovery drills exercise the crc32 path
         with open(path, "r+b") as f:
             for _ in range(8):
                 off = int(self.rng.integers(0, max(1, size)))

@@ -24,17 +24,17 @@ import numpy as np
 from repro.core.cutoff._normal import (ndtr as _ndtr, ndtr_jax as _ndtr_jax,
                                        ndtri as _ndtri,
                                        ndtri_jax as _ndtri_jax)
+from repro.core.cutoff.eps import CDF_CLIP, SIGMA_FLOOR, U_CLIP_LO
 
 
 # Both the f64 reference and the f32 device sampler clip the truncation CDF
-# and the effective uniform at the SAME epsilons — chosen representable in
-# f32 (the tighter 1e-9/1e-12 clips of a pure-f64 design round to exactly
-# 0/1 there).  This caps the inverse-CDF at the 1-1e-6 quantile (~4.75
-# sigma above the bound): the two paths then sample the same distribution
-# and the device/numpy equivalence suite can hold them together even
-# through far-tail draws.
-_CDF_CLIP = 1e-6
-_U_CLIP_LO = 1e-7
+# and the effective uniform at the SAME epsilons, shared (with the
+# rationale) in ``repro.core.cutoff.eps`` — this caps the inverse-CDF at
+# the 1-CDF_CLIP quantile (~4.75 sigma above the bound) so the two paths
+# sample the same distribution and the device/numpy equivalence suite can
+# hold them together even through far-tail draws.
+_CDF_CLIP = CDF_CLIP
+_U_CLIP_LO = U_CLIP_LO
 
 
 def truncated_normal_sample(mu, sigma, lower, rng=None, u=None) -> np.ndarray:
@@ -50,7 +50,7 @@ def truncated_normal_sample(mu, sigma, lower, rng=None, u=None) -> np.ndarray:
     """
     mu = np.asarray(mu, np.float64)
     lower = np.asarray(lower, np.float64)
-    sigma = np.maximum(np.asarray(sigma, np.float64), 1e-9)
+    sigma = np.maximum(np.asarray(sigma, np.float64), SIGMA_FLOOR)
     a = _ndtr((lower - mu) / sigma)
     a = np.clip(a, 0.0, 1.0 - _CDF_CLIP)
     if u is None:
@@ -86,7 +86,7 @@ def truncated_normal_sample_jax(mu, sigma, lower, u) -> jnp.ndarray:
     both paths sample the same capped-tail distribution; residual
     differences are f32 arithmetic only.
     """
-    sigma = jnp.maximum(sigma, 1e-9)
+    sigma = jnp.maximum(sigma, SIGMA_FLOOR)
     a = _ndtr_jax((lower - mu) / sigma)
     a = jnp.clip(a, 0.0, 1.0 - _CDF_CLIP)
     uu = a + (1.0 - a) * u

@@ -19,6 +19,8 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cutoff.eps import OMEGA_FLOOR
+
 
 def min_frac_floor(n: int, min_frac: float) -> int:
     """The smallest 0-based index the argmax may pick: c >= min_frac * n.
@@ -40,7 +42,7 @@ def throughput_curve(samples: np.ndarray) -> np.ndarray:
     """E[Omega(c)] for c = 1..n, from MC samples (K, n)."""
     s = np.sort(np.asarray(samples), axis=1)
     c = np.arange(1, s.shape[1] + 1, dtype=np.float64)
-    return (c[None, :] / np.maximum(s, 1e-9)).mean(axis=0)
+    return (c[None, :] / np.maximum(s, OMEGA_FLOOR)).mean(axis=0)
 
 
 def optimal_cutoff(samples: np.ndarray, min_frac: float = 0.0) -> int:
@@ -75,7 +77,10 @@ def sorted_rows_jax(x) -> jnp.ndarray:
     m = 1 << max(n - 1, 0).bit_length()
     if m != n:
         x = jnp.pad(x, ((0, 0), (0, m - n)), constant_values=jnp.inf)
-    idx = np.arange(m)
+    # jnp (not np) index math: numpy constants would be staged into the
+    # jaxpr through device_put eqns, which the jaxpr auditor rejects on
+    # this path; as traced int ops XLA constant-folds them identically
+    idx = jnp.arange(m)
     ksz = 2
     while ksz <= m:
         j = ksz // 2
@@ -100,7 +105,7 @@ def throughput_curve_jax(samples) -> jnp.ndarray:
     """E[Omega(c)] for c = 1..n, from MC samples (K, n)."""
     s = sorted_rows_jax(samples)
     c = jnp.arange(1, s.shape[1] + 1, dtype=samples.dtype)
-    return jnp.mean(c[None, :] / jnp.maximum(s, 1e-9), axis=0)
+    return jnp.mean(c[None, :] / jnp.maximum(s, OMEGA_FLOOR), axis=0)
 
 
 def _cutoff_from_sorted(s, lo: int) -> jnp.ndarray:
@@ -110,7 +115,7 @@ def _cutoff_from_sorted(s, lo: int) -> jnp.ndarray:
     decision paths is structural, not by parallel edit."""
     n = s.shape[1]
     cs = jnp.arange(1, n + 1, dtype=s.dtype)
-    omega = jnp.mean(cs[None, :] / jnp.maximum(s, 1e-9), axis=0)
+    omega = jnp.mean(cs[None, :] / jnp.maximum(s, OMEGA_FLOOR), axis=0)
     c = jnp.argmax(omega[lo:]) + lo + 1
     return jnp.minimum(c, n).astype(jnp.int32)
 
@@ -147,7 +152,7 @@ def _cutoff_from_sorted_ragged(s, lo, n_real) -> jnp.ndarray:
     """
     n = s.shape[1]
     cs = jnp.arange(1, n + 1, dtype=s.dtype)
-    omega = jnp.mean(cs[None, :] / jnp.maximum(s, 1e-9), axis=0)
+    omega = jnp.mean(cs[None, :] / jnp.maximum(s, OMEGA_FLOOR), axis=0)
     i = jnp.arange(n)
     valid = (i >= lo) & (i < n_real)
     c = jnp.argmax(jnp.where(valid, omega, -jnp.inf)) + 1
@@ -180,7 +185,7 @@ def oracle_cutoff(actual: np.ndarray) -> int:
     """Best cutoff in hindsight for one observed runtime vector (n,)."""
     s = np.sort(np.asarray(actual))
     c = np.arange(1, s.shape[0] + 1, dtype=np.float64)
-    return int(np.argmax(c / np.maximum(s, 1e-9))) + 1
+    return int(np.argmax(c / np.maximum(s, OMEGA_FLOOR))) + 1
 
 
 def iter_time(actual: np.ndarray, c: int) -> float:

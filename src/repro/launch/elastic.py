@@ -50,6 +50,7 @@ def run_churn_demo(steps: int = 60, seed: int = 0) -> dict:
     shrink_at, recover_at = steps // 3, 2 * steps // 3
     ckpt_dir = "/tmp/repro_elastic_demo"
     import shutil
+    # reprolint: disable=nonatomic-checkpoint-write -- demo scrubs its own /tmp scratch root before a fresh run; nothing published lives here yet
     shutil.rmtree(ckpt_dir, ignore_errors=True)
 
     print(f"=== fit the DMM on a {n}-worker paper-cluster trace ===")

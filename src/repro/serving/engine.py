@@ -34,6 +34,7 @@ class ServeEngine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
 
+    # reprolint: hot-path
     def generate(self, tokens: np.ndarray, n_new: int,
                  temperature: float = 0.0, seed: int = 0,
                  frames: Optional[np.ndarray] = None) -> np.ndarray:
@@ -54,12 +55,16 @@ class ServeEngine:
         out = []
         nxt = self._sample(last_logits, temperature, key)
         for t in range(n_new):
-            out.append(np.asarray(nxt))
+            # keep the loop transfer-free: collect DEVICE arrays so each
+            # decode dispatch overlaps the previous step instead of
+            # blocking on a per-token host copy
+            out.append(nxt)
             logits, caches = self._decode(self.params, nxt[:, None],
                                           jnp.int32(S + t), caches)
             key, sub = jax.random.split(key)
             nxt = self._sample(logits[:, 0], temperature, sub)
-        return np.stack(out, axis=1)
+        # reprolint: disable=host-sync-in-hot-path -- the ONE designated fetch: all n_new tokens come back in a single transfer after the loop has been fully enqueued
+        return np.asarray(jnp.stack(out, axis=1))
 
     @staticmethod
     def _sample(logits, temperature, key):

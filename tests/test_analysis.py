@@ -1,0 +1,480 @@
+"""reprolint rule-by-rule contract tests.
+
+Every rule gets a BAD fixture it must flag and a CLEAN fixture it must
+not (zero false positives is part of the contract — a linter that cries
+wolf gets disabled, not fixed).  Fixtures are inline source strings
+written to ``tmp_path`` so the repo's own ``--strict`` run never sees
+them as code.  The donation pass additionally pins its documented
+order-insensitivity: permuting independent statements (def-use order
+preserved) never changes the finding multiset.
+"""
+from __future__ import annotations
+
+import json
+import re
+import textwrap
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import all_rules, render_json, rule_ids, run_rules
+from repro.analysis.core import discover
+
+
+def lint(tmp_path, files, select=None):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    project = discover([str(tmp_path)], root=str(tmp_path),
+                       known_rules=rule_ids())
+    rules = all_rules()
+    if select is not None:
+        rules = [r for r in rules if r.id in select]
+    return run_rules(project, rules)
+
+
+def rules_hit(findings):
+    return {f.rule for f in findings}
+
+
+# -- host-sync-in-hot-path --------------------------------------------------
+
+
+HOT_SYNC_BAD = """\
+    import jax
+    import jax.numpy as jnp
+
+    class CutoffController:
+        def observe(self, times):
+            x = jnp.asarray(times)
+            v = x.sum()
+            a = v.item()
+            b = float(jnp.mean(x))
+            return a + b
+"""
+
+HOT_SYNC_VIA_CALLEE = """\
+    import jax.numpy as jnp
+
+    def drain(v):
+        return v.item()
+
+    class PSServer:
+        def flush(self):
+            v = jnp.zeros(3).sum()
+            return drain(v)
+"""
+
+HOT_SYNC_CLEAN = """\
+    import jax.numpy as jnp
+
+    class Supervisor:
+        def tick(self, now):
+            # host bookkeeping: int()/float() of PLAIN host values is fine
+            t = int(now) + 1
+            frac = float(t) / 2.0
+            return t, frac
+
+    def offline_report(x):
+        # not reachable from any hot root: syncs are allowed
+        return float(jnp.sum(jnp.asarray(x)))
+"""
+
+
+def test_host_sync_flags_item_and_tainted_conversions(tmp_path):
+    fs = lint(tmp_path, {"mod.py": HOT_SYNC_BAD},
+              select={"host-sync-in-hot-path"})
+    assert len(fs) == 2
+    assert {f.line for f in fs} == {8, 9}
+
+
+def test_host_sync_follows_the_call_graph(tmp_path):
+    fs = lint(tmp_path, {"mod.py": HOT_SYNC_VIA_CALLEE},
+              select={"host-sync-in-hot-path"})
+    assert len(fs) == 1
+    assert "PSServer.flush" in fs[0].message
+
+
+def test_host_sync_clean_host_bookkeeping(tmp_path):
+    assert lint(tmp_path, {"mod.py": HOT_SYNC_CLEAN},
+                select={"host-sync-in-hot-path"}) == []
+
+
+def test_hot_path_marker_extends_roots(tmp_path):
+    src = """\
+        import jax.numpy as jnp
+
+        # reprolint: hot-path
+        def serve(x):
+            return jnp.asarray(x).sum().item()
+    """
+    fs = lint(tmp_path, {"mod.py": src}, select={"host-sync-in-hot-path"})
+    assert len(fs) == 1
+
+
+# -- donation-after-use -----------------------------------------------------
+
+
+DONATION_BAD = """\
+    import jax
+
+    def f(x):
+        return x
+
+    step = jax.jit(f, donate_argnums=(0,))
+
+    def run(state, batch):
+        out = step(state)
+        return state
+"""
+
+DONATION_CLEAN = """\
+    import jax
+
+    def f(x):
+        return x
+
+    step = jax.jit(f, donate_argnums=(0,))
+
+    def run(state, batch):
+        state = step(state)      # rebind-and-forget: the contract
+        return state
+
+    def build(cfg, opt):
+        s = jax.jit(f, donate_argnums=(0,))   # builder call donates nothing
+        return cfg, opt, s
+"""
+
+
+def test_donation_read_after_donate_flags(tmp_path):
+    fs = lint(tmp_path, {"mod.py": DONATION_BAD},
+              select={"donation-after-use"})
+    assert len(fs) == 1
+    assert "state" in fs[0].message and fs[0].line == 10
+
+
+def test_donation_rebind_and_builder_clean(tmp_path):
+    assert lint(tmp_path, {"mod.py": DONATION_CLEAN},
+                select={"donation-after-use"}) == []
+
+
+_HEADER = """\
+import jax
+
+
+def f(x):
+    return x
+
+
+def make():
+    return 0
+
+
+"""
+
+_BLOCK = ("step{i} = jax.jit(f, donate_argnums=(0,))\n"
+          "s{i} = make()\n"
+          "o{i} = step{i}(s{i})\n"
+          "r{i} = s{i} + 1\n")
+
+
+def _interleave(seed, blocks):
+    """Deterministic def-use-preserving merge of statement blocks."""
+    idxs = [0] * len(blocks)
+    out, state = [], seed
+    while any(i < len(b) for i, b in zip(idxs, blocks)):
+        live = [k for k, b in enumerate(blocks) if idxs[k] < len(b)]
+        state = (state * 1103515245 + 12345) % (2 ** 31)
+        k = live[state % len(live)]
+        out.append(blocks[k][idxs[k]])
+        idxs[k] += 1
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 30))
+def test_donation_findings_order_insensitive(tmp_path_factory, seed):
+    """Permuting independent statements never changes WHAT is flagged:
+    every block's post-donation read is found, nothing else is."""
+    blocks = [_BLOCK.format(i=i).splitlines() for i in range(3)]
+    src = _HEADER + "\n".join(_interleave(seed, blocks)) + "\n"
+    tmp = tmp_path_factory.mktemp(f"perm{seed % 997}")
+    fs = lint(tmp, {"mod.py": src}, select={"donation-after-use"})
+    names = sorted(re.search(r"`(s\d+)` is read after", f.message).group(1)
+                   for f in fs)
+    assert names == ["s0", "s1", "s2"]
+
+
+# -- colwise-rng ------------------------------------------------------------
+
+
+COLWISE_BAD = """\
+    import jax
+
+    @jax.jit
+    def decide(key, times):
+        n = times.shape[0]
+        eps = jax.random.normal(key, shape=(n,))
+        return eps
+"""
+
+COLWISE_CLEAN = """\
+    import jax
+    from repro.core.runtime_model import api
+
+    @jax.jit
+    def decide(key, times):
+        n = times.shape[0]
+        eps = api.colwise_normal(key, n)        # the sanctioned path
+        u = jax.random.uniform(key)             # scalar draw: fine
+        return eps + u
+"""
+
+
+def test_colwise_rng_flags_width_shaped_raw_draw(tmp_path):
+    fs = lint(tmp_path, {"mod.py": COLWISE_BAD}, select={"colwise-rng"})
+    assert len(fs) == 1 and fs[0].line == 6
+
+
+def test_colwise_rng_clean_api_and_scalar_draws(tmp_path):
+    assert lint(tmp_path, {"mod.py": COLWISE_CLEAN},
+                select={"colwise-rng"}) == []
+
+
+# -- nonatomic-checkpoint-write ---------------------------------------------
+
+
+CKPT_BAD = """\
+    import os
+
+    def save(ckpt_dir, blob):
+        path = os.path.join(ckpt_dir, "step_0000000005")
+        with open(path, "w") as f:
+            f.write(blob)
+        os.rename(path, path + ".bak")
+"""
+
+CKPT_CLEAN = """\
+    def save_log(log_path, blob):
+        with open(log_path, "w") as f:     # not a checkpoint path
+            f.write(blob)
+"""
+
+CKPT_STORE_EXEMPT = """\
+    import os
+
+    def publish(ckpt_dir, tmp):
+        os.rename(tmp, ckpt_dir)           # the store OWNS the protocol
+"""
+
+
+def test_checkpoint_write_flags_direct_writes(tmp_path):
+    fs = lint(tmp_path, {"mod.py": CKPT_BAD},
+              select={"nonatomic-checkpoint-write"})
+    assert len(fs) == 2
+    assert {f.line for f in fs} == {5, 7}
+
+
+def test_checkpoint_write_clean_and_store_exempt(tmp_path):
+    assert lint(tmp_path, {"mod.py": CKPT_CLEAN},
+                select={"nonatomic-checkpoint-write"}) == []
+    assert lint(tmp_path, {"checkpoint/store.py": CKPT_STORE_EXEMPT},
+                select={"nonatomic-checkpoint-write"}) == []
+
+
+# -- event-kind-drift -------------------------------------------------------
+
+
+EVENTS_BAD = """\
+    EVENT_KINDS = (
+        "alpha",
+        "beta",
+    )
+
+    class Log:
+        def emit(self, tick, kind):
+            pass
+
+    def go(log):
+        log.emit(0, "alpha")
+        log.emit(0, "gamma")
+"""
+
+EVENTS_CLEAN = """\
+    EVENT_KINDS = ("alpha", "beta")
+
+    class Log:
+        def emit(self, tick, kind):
+            pass
+
+    def go(log, ev):
+        log.emit(0, "alpha")
+        log.emit(1, kind="beta")
+        log.emit(2, ev.kind)        # dynamic: runtime check owns it
+"""
+
+
+def test_event_kind_drift_both_directions(tmp_path):
+    fs = lint(tmp_path, {"mod.py": EVENTS_BAD}, select={"event-kind-drift"})
+    blob = "\n".join(f.message for f in fs)
+    assert len(fs) == 2
+    assert "unregistered kind 'gamma'" in blob
+    assert "'beta' is never emitted" in blob
+    # the dead-kind finding anchors at the constant's own line, so it
+    # can be suppressed per-kind
+    assert {f.line for f in fs if "never emitted" in f.message} == {3}
+
+
+def test_event_kind_drift_clean(tmp_path):
+    assert lint(tmp_path, {"mod.py": EVENTS_CLEAN},
+                select={"event-kind-drift"}) == []
+
+
+# -- static-argnum-width ----------------------------------------------------
+
+
+STATIC_BAD = """\
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def pad_to(x, n):
+        return x
+
+    @functools.partial(jax.jit, static_argnums=(1,))
+    def floor_at(x, lo):
+        return x
+"""
+
+STATIC_CLEAN = """\
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("mode",))
+    def dispatch(x, n, mode):
+        return x
+"""
+
+
+def test_static_width_flags_names_and_nums(tmp_path):
+    fs = lint(tmp_path, {"mod.py": STATIC_BAD},
+              select={"static-argnum-width"})
+    assert len(fs) == 2
+    assert {f.line for f in fs} == {5, 9}
+
+
+def test_static_width_clean_mode_static(tmp_path):
+    assert lint(tmp_path, {"mod.py": STATIC_CLEAN},
+                select={"static-argnum-width"}) == []
+
+
+# -- twin-epsilon-drift -----------------------------------------------------
+
+
+TWIN_BAD = """\
+    import jax.numpy as jnp
+    import numpy as np
+
+    def curve(x):
+        return x / np.maximum(x, 1e-9)
+
+    def curve_jax(x):
+        return x / jnp.maximum(x, 1e-9)
+"""
+
+TWIN_CLEAN = """\
+    import jax.numpy as jnp
+    import numpy as np
+
+    FLOOR = 1e-9
+
+    def curve(x):
+        return x / np.maximum(x, FLOOR)
+
+    def curve_jax(x):
+        return x / jnp.maximum(x, FLOOR)
+
+    def lonely(x):
+        return x + 1e-9        # no _jax twin: not this rule's business
+"""
+
+
+def test_twin_epsilon_flags_inline_literals_in_twins(tmp_path):
+    fs = lint(tmp_path, {"mod.py": TWIN_BAD},
+              select={"twin-epsilon-drift"})
+    assert len(fs) == 2
+    assert {f.line for f in fs} == {5, 8}
+
+
+def test_twin_epsilon_clean_shared_constant(tmp_path):
+    assert lint(tmp_path, {"mod.py": TWIN_CLEAN},
+                select={"twin-epsilon-drift"}) == []
+
+
+# -- suppressions -----------------------------------------------------------
+
+
+def test_suppression_with_reason_silences(tmp_path):
+    src = """\
+        import jax
+
+        def f(x):
+            return x
+
+        step = jax.jit(f, donate_argnums=(0,))
+
+        def run(state):
+            out = step(state)
+            # reprolint: disable=donation-after-use -- test double-read on purpose
+            return state
+    """
+    assert lint(tmp_path, {"mod.py": src},
+                select={"donation-after-use"}) == []
+
+
+def test_suppression_without_reason_is_itself_a_finding(tmp_path):
+    src = """\
+        import jax
+
+        def f(x):
+            return x
+
+        step = jax.jit(f, donate_argnums=(0,))
+
+        def run(state):
+            out = step(state)
+            return state  # reprolint: disable=donation-after-use
+    """
+    fs = lint(tmp_path, {"mod.py": src})
+    assert rules_hit(fs) == {"bad-suppression", "donation-after-use"}
+
+
+def test_suppression_unknown_rule_is_flagged(tmp_path):
+    src = """\
+        # reprolint: disable=no-such-rule -- says who
+        x = 1
+    """
+    fs = lint(tmp_path, {"mod.py": src})
+    assert rules_hit(fs) == {"bad-suppression"}
+
+
+# -- reporters --------------------------------------------------------------
+
+
+def test_json_reporter_schema(tmp_path):
+    fs = lint(tmp_path, {"mod.py": DONATION_BAD},
+              select={"donation-after-use"})
+    doc = json.loads(render_json(fs))
+    assert doc["version"] == 1
+    assert doc["total"] == len(fs) == len(doc["findings"])
+    assert doc["counts"] == {"donation-after-use": 1}
+    f = doc["findings"][0]
+    assert set(f) >= {"path", "line", "col", "rule", "message"}
+
+
+def test_parse_error_is_reported_not_raised(tmp_path):
+    fs = lint(tmp_path, {"mod.py": "def broken(:\n"})
+    assert rules_hit(fs) == {"parse-error"}

@@ -41,6 +41,7 @@ def _restored_value(d, step=None):
 
 def _park_as(d, step, name):
     """Move the published step dir aside under ``name`` (tmp/stale)."""
+    # reprolint: disable=nonatomic-checkpoint-write -- this helper STAGES the crash windows the store must recover from
     os.rename(os.path.join(d, f"step_{step:010d}"), os.path.join(d, name))
 
 
@@ -58,6 +59,7 @@ def test_crash_between_renames_promotes_complete_tmp(tmp_path):
     _park_as(d, 5, "stale.5")           # the old copy, parked
     scratch = tmp_path / "scratch"
     _save(scratch, 5, v=2.0)            # the new copy, fully written...
+    # reprolint: disable=nonatomic-checkpoint-write -- simulates a crash mid-publish (tmp dir present, rename never ran)
     os.rename(os.path.join(scratch, f"step_{5:010d}"),
               os.path.join(d, "tmp.5"))  # ...but never published
     assert store.latest_step(d) == 5     # recovery ran on open
@@ -73,6 +75,7 @@ def test_crash_mid_write_restores_stale(tmp_path):
     _save(d, 5, v=1.0)
     _park_as(d, 5, "stale.5")
     os.makedirs(os.path.join(d, "tmp.5"))
+    # reprolint: disable=nonatomic-checkpoint-write -- simulates a crash mid-WRITE: a half-baked tmp dir the store must discard
     np.savez(os.path.join(d, "tmp.5", "state.npz"), w=np.zeros(2))
     assert store.latest_step(d) == 5
     assert _restored_value(d) == 1.0     # the old checkpoint survived
@@ -87,6 +90,7 @@ def test_crash_before_stale_cleanup_drops_debris(tmp_path):
     _park_as(d, 5, "stale.5")           # the old copy, parked aside
     scratch = tmp_path / "scratch"
     _save(scratch, 5, v=2.0)
+    # reprolint: disable=nonatomic-checkpoint-write -- simulates a crash AFTER publish (stale dir left behind)
     os.rename(os.path.join(scratch, f"step_{5:010d}"),
               os.path.join(d, f"step_{5:010d}"))  # publish completed
     assert store.latest_step(d) == 5
@@ -100,6 +104,7 @@ def test_incomplete_fresh_tmp_is_debris(tmp_path):
     d = str(tmp_path)
     _save(d, 5, v=1.0)
     os.makedirs(os.path.join(d, "tmp.6"))
+    # reprolint: disable=nonatomic-checkpoint-write -- simulates an orphaned tmp dir from a NEWER crashed step
     np.savez(os.path.join(d, "tmp.6", "state.npz"), w=np.zeros(2))
     assert store.latest_step(d) == 5
     assert not os.path.exists(os.path.join(d, "tmp.6"))
@@ -115,6 +120,7 @@ def test_resave_after_crash_window_does_not_lose_the_step(tmp_path):
     _park_as(d, 5, "stale.5")
     scratch = tmp_path / "scratch"
     _save(scratch, 5, v=2.0)
+    # reprolint: disable=nonatomic-checkpoint-write -- simulates the crash window a later re-save must win over
     os.rename(os.path.join(scratch, f"step_{5:010d}"),
               os.path.join(d, "tmp.5"))
     _save(d, 5, v=3.0)                  # re-save of the crashed step
@@ -129,6 +135,7 @@ def test_resave_after_crash_window_does_not_lose_the_step(tmp_path):
 
 def _corrupt(d, step, group="state"):
     path = os.path.join(str(d), f"step_{step:010d}", f"{group}.npz")
+    # reprolint: disable=nonatomic-checkpoint-write -- deliberate bit-flip so the crc32 manifest check has something to catch
     with open(path, "r+b") as f:
         f.seek(os.path.getsize(path) // 2)
         b = f.read(1)
@@ -160,6 +167,7 @@ def test_latest_valid_step_walks_past_corruption(tmp_path):
 
 def test_missing_group_file_raises(tmp_path):
     _save(tmp_path, 5, v=1.0)
+    # reprolint: disable=nonatomic-checkpoint-write -- deletes a published group file to drive the missing-file error path
     os.remove(os.path.join(str(tmp_path), f"step_{5:010d}", "state.npz"))
     with pytest.raises(CheckpointError, match="file missing"):
         store.verify_step(str(tmp_path), 5)
@@ -168,6 +176,7 @@ def test_missing_group_file_raises(tmp_path):
 def test_torn_manifest_raises(tmp_path):
     _save(tmp_path, 5, v=1.0)
     man = os.path.join(str(tmp_path), f"step_{5:010d}", "manifest.json")
+    # reprolint: disable=nonatomic-checkpoint-write -- writes a TORN manifest on purpose to drive the corrupt-manifest error path
     with open(man, "w") as f:
         f.write('{"step": 5, "gro')
     with pytest.raises(CheckpointError, match="manifest"):
@@ -184,6 +193,7 @@ def test_pre_checksum_manifest_still_restores(tmp_path):
         manifest = json.load(f)
     for g in manifest["groups"].values():
         g.pop("crc32")
+    # reprolint: disable=nonatomic-checkpoint-write -- rewrites the manifest sans checksums to simulate a pre-crc32 checkpoint
     with open(man, "w") as f:
         json.dump(manifest, f)
     assert _restored_value(d) == 1.0

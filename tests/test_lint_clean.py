@@ -1,0 +1,67 @@
+"""The repo itself lints clean, and ANALYSIS.json stays honest.
+
+Two guards.  First: ``repro.analysis`` over the real ``src`` and
+``tests`` trees finds NOTHING — every violation is either fixed or
+carries a reasoned suppression, and it stays that way.  Second: the
+committed ``ANALYSIS.json`` (the jaxpr audit pin, like the BENCH_*
+files) keeps its schema, covers the four hot entry points, and still
+says transfer-free with donation effective.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+EXPECTED_ENTRIES = {
+    "fused_observe_decide",
+    "batched_observe_decide_ragged",
+    "train_step[mask_agg=weights]",
+    "train_step[mask_agg=psum]",
+}
+
+
+def test_repo_lints_clean():
+    from repro.analysis import lint_paths
+
+    findings = lint_paths([str(REPO / "src"), str(REPO / "tests")],
+                          root=str(REPO))
+    assert findings == [], "\n" + "\n".join(f.render() for f in findings)
+
+
+def test_analysis_json_committed_and_schema():
+    path = REPO / "ANALYSIS.json"
+    assert path.exists(), "ANALYSIS.json not committed (run " \
+        "`python -m repro.analysis --audit`)"
+    doc = json.loads(path.read_text())
+    assert doc["version"] == 1
+    assert doc["ok"] is True
+    assert isinstance(doc["jax_version"], str)
+    entries = {e["name"]: e for e in doc["entries"]}
+    assert set(entries) == EXPECTED_ENTRIES
+    for name, e in entries.items():
+        assert e["n_eqns"] > 0
+        assert e["forbidden_primitives"] == []
+        assert e["transfer_free"] is True
+        d = e["donation"]
+        assert set(d) == {"expected", "n_aliased_outputs", "effective"}
+        assert d["effective"] is True
+    for name in ("train_step[mask_agg=weights]",
+                 "train_step[mask_agg=psum]"):
+        assert entries[name]["donation"]["expected"] is True
+        assert entries[name]["donation"]["n_aliased_outputs"] > 0
+
+
+def test_audit_report_matches_committed_schema(tmp_path):
+    """A fresh audit writes the same shape the committed pin has (the
+    values may drift with jax versions; the schema may not)."""
+    from repro.analysis.jaxpr_audit import write_report
+
+    out = tmp_path / "ANALYSIS.json"
+    report = write_report(str(out))
+    on_disk = json.loads(out.read_text())
+    assert on_disk == report
+    assert set(report) == {"version", "jax_version", "ok", "entries"}
+    assert {e["name"] for e in report["entries"]} == EXPECTED_ENTRIES
+    assert report["ok"] is True
