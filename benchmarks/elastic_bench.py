@@ -18,8 +18,6 @@ from __future__ import annotations
 import json
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 
 
@@ -78,6 +76,7 @@ def _churn_bench(steps: int, refit_steps: int):
     from repro.data.pipeline import SyntheticTokens
     from repro.launch.train import Trainer, clock_to_loss, jit_train_step
     from repro.models import model as M
+    from repro.obs import ObsRun
 
     cfg = bench_tiny_config()
     n = 8
@@ -117,8 +116,10 @@ def _churn_bench(steps: int, refit_steps: int):
             ctl.seed_window(trace[-40:])
         data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
                                global_batch=24, seed=0)
+        # per-run in-memory obs: clock-to-loss reads the step stream
         tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=ctl,
-                     timer=make_timer(), n_workers=n)
+                     timer=make_timer(), n_workers=n, obs=ObsRun(),
+                     name=name)
         tr.restore_or_init(init_fn)
         tr.run(2)                          # compile the width-8 step
         t0 = time.perf_counter()
@@ -127,16 +128,16 @@ def _churn_bench(steps: int, refit_steps: int):
         runs[name] = {"tr": tr, "steps_per_s": steps / wall}
 
     el, sync = runs["elastic"]["tr"], runs["sync"]["tr"]
-    target = float(np.mean([h["loss"] for h in sync.history[-3:]]))
-    clock_to = lambda hist: clock_to_loss(hist, target)
+    target = sync.obs.steps.final_loss(window=3)
+    clock_to = lambda stream: clock_to_loss(stream, target)
 
     out = {"arch": f"{cfg.name}/bench_tiny", "n_workers": n, "steps": steps,
            "shrink_at": shrink_at, "recover_at": recover_at,
            "elastic_steps_per_s": runs["elastic"]["steps_per_s"],
            "sync_steps_per_s": runs["sync"]["steps_per_s"],
            "refit_s": refit_wall, "n_refits": len(refit_wall),
-           "clock_to_loss_elastic": clock_to(el.history),
-           "clock_to_loss_sync": clock_to(sync.history)}
+           "clock_to_loss_elastic": clock_to(el.obs.steps),
+           "clock_to_loss_sync": clock_to(sync.obs.steps)}
     emit("elastic/churn_elastic_steps_per_s",
          1e6 / out["elastic_steps_per_s"],
          f"{out['elastic_steps_per_s']:.2f} steps/s")

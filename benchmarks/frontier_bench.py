@@ -60,6 +60,7 @@ def _race(steps: int):
     from repro.data.pipeline import SyntheticTokens
     from repro.launch.train import Trainer, clock_to_loss, jit_train_step
     from repro.models import model as M
+    from repro.obs import ObsRun
 
     cfg = bench_tiny_config()
     n = 8
@@ -95,9 +96,16 @@ def _race(steps: int):
     for name, ctl, fn in policies:
         data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=16,
                                global_batch=32, seed=0)
-        tr = Trainer(cfg=cfg, step_fn=fn, data=data, controller=ctl,
+        # every policy records to its own in-memory ObsRun: the race
+        # trajectory is read back from the obs step stream (the one
+        # recorder) and the quality wrapper scores each decision —
+        # decisions stay bit-identical under the wrap
+        obs = ObsRun()
+        tr = Trainer(cfg=cfg, step_fn=fn, data=data,
+                     controller=obs.wrap(ctl, policy=name),
                      timer=ClusterSim(n_workers=n, seed=9, **SIM),
-                     n_workers=n, mask_agg="psum", metrics_every=0)
+                     n_workers=n, mask_agg="psum", metrics_every=0,
+                     obs=obs, name=name)
         tr.restore_or_init(init_fn)
         t0 = time.perf_counter()
         if name == "sync":
@@ -109,21 +117,20 @@ def _race(steps: int):
         wall = time.perf_counter() - t0
         runs[name] = {"tr": tr, "steps_per_s": tr.step / wall}
 
-    target = float(np.mean(
-        [h["loss"] for h in runs["sync"]["tr"].history[-3:]]))
+    target = runs["sync"]["tr"].obs.steps.final_loss(window=3)
 
     race = []
     for name, _, _ in policies:
         tr = runs[name]["tr"]
-        hist = tr.history
-        t_loss = clock_to_loss(hist, target)
+        steps_stream = tr.obs.steps
+        t_loss = clock_to_loss(steps_stream, target)
         row = {"policy": name,
                "clock_to_loss": t_loss,
-               "final_loss": float(np.mean([h["loss"]
-                                            for h in hist[-3:]])),
-               "steps": len(hist),
-               "total_clock": float(hist[-1]["clock"]),
-               "mean_cutoff": float(np.mean([h["c"] for h in hist])),
+               "final_loss": steps_stream.final_loss(window=3),
+               "steps": len(steps_stream),
+               "total_clock": steps_stream.total_clock(),
+               "mean_cutoff": float(np.mean(
+                   [r["c"] for r in steps_stream.records])),
                "steps_per_s": runs[name]["steps_per_s"]}
         race.append(row)
         fmt = "n/a" if t_loss is None else f"{t_loss:.1f}s"

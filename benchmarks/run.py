@@ -2,14 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
-                [--only agg|controller|elastic|ps|frontier|controlplane]
+                [--only agg|controller|elastic|ps|frontier|controlplane|obs]
 
 ``--only agg`` / ``--only controller`` / ``--only elastic`` / ``--only
-ps`` / ``--only frontier`` / ``--only controlplane`` run a single
-section (what ``scripts/ci.sh --bench`` uses); they also write
-``BENCH_agg.json`` / ``BENCH_controller.json`` / ``BENCH_elastic.json``
-/ ``BENCH_ps.json`` / ``BENCH_frontier.json`` /
-``BENCH_controlplane.json`` respectively.
+ps`` / ``--only frontier`` / ``--only controlplane`` / ``--only obs``
+run a single section (what ``scripts/ci.sh --bench`` uses); they also
+write ``BENCH_agg.json`` / ``BENCH_controller.json`` /
+``BENCH_elastic.json`` / ``BENCH_ps.json`` / ``BENCH_frontier.json`` /
+``BENCH_controlplane.json`` / ``BENCH_obs.json`` respectively.
 """
 import argparse
 import sys
@@ -22,14 +22,14 @@ def main() -> None:
                     help="skip the 2175-worker Cray model + shrink fig4")
     ap.add_argument("--only", default=None,
                     choices=["agg", "controller", "elastic", "ps",
-                             "frontier", "controlplane"],
+                             "frontier", "controlplane", "obs"],
                     help="run a single benchmark section")
     args = ap.parse_args()
 
     from benchmarks import (agg_bench, controller_bench,
                             controlplane_bench, elastic_bench,
-                            frontier_bench, kernels_bench, paper_figures,
-                            ps_bench, roofline)
+                            frontier_bench, kernels_bench, obs_bench,
+                            paper_figures, ps_bench, roofline)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -58,6 +58,10 @@ def main() -> None:
         controlplane_bench.bench_controlplane(quick=args.quick)
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return
+    if args.only == "obs":
+        obs_bench.bench_obs(quick=args.quick)
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
     paper_figures.bench_elfving_table()
     paper_figures.bench_fig2_throughput()
     paper_figures.bench_fig3_prediction(cray=not args.quick)
@@ -73,6 +77,7 @@ def main() -> None:
     frontier_bench.bench_frontier(quick=args.quick)
     paper_figures.bench_frontier_panel()
     controlplane_bench.bench_controlplane(quick=args.quick)
+    obs_bench.bench_obs(quick=args.quick)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

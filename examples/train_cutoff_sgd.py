@@ -46,6 +46,10 @@ def main():
                     help="how the bit array meets the gradients: folded "
                          "per-example weights (production) or the explicit "
                          "per-worker gradient psum")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write obs telemetry (spans/steps/decisions/"
+                         "metrics JSONL) under this directory; render "
+                         "with: python -m repro.obs <dir>")
     args = ap.parse_args()
 
     cfg = model_100m()
@@ -64,6 +68,12 @@ def main():
     else:
         ctl = FullSyncController(args.workers)
 
+    obs = None
+    if args.obs_dir:
+        from repro.obs import ObsRun
+        obs = ObsRun(args.obs_dir)
+        ctl = obs.wrap(ctl, policy=args.method)
+
     data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=args.seq,
                            global_batch=args.batch, seed=0)
     opt = optim.clip_by_global_norm(
@@ -72,7 +82,8 @@ def main():
     tr = Trainer(cfg=cfg, step_fn=step, data=data, controller=ctl,
                  timer=ClusterSim(n_workers=args.workers, n_nodes=4, seed=9),
                  n_workers=args.workers, mask_agg=args.mask_agg,
-                 ckpt_dir=args.ckpt, ckpt_every=100)
+                 ckpt_dir=args.ckpt, ckpt_every=100, obs=obs,
+                 name=args.method)
 
     def init_fn():
         params = M.init_model(cfg, jax.random.PRNGKey(0))
@@ -90,6 +101,10 @@ def main():
           f"({tr.sim_clock/len(hist):.3f}s/step)")
     print(f"mean cutoff: {np.mean(cs):.1f}/{args.workers}")
     print(f"host compute time: {dt:.1f}s ({dt/args.steps:.2f}s/step)")
+    if obs is not None:
+        obs.close()
+        print(f"obs streams -> {args.obs_dir} "
+              f"(render: python -m repro.obs {args.obs_dir})")
 
 
 if __name__ == "__main__":

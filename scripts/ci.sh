@@ -9,7 +9,8 @@
 #                            #              BENCH_elastic.json +
 #                            #              BENCH_ps.json +
 #                            #              BENCH_frontier.json +
-#                            #              BENCH_controlplane.json
+#                            #              BENCH_controlplane.json +
+#                            #              BENCH_obs.json
 #   scripts/ci.sh --drill    # live fault drills: subprocess kill -9 /
 #                            # hang / flaky restart + the supervised
 #                            # trainer storm with scripted-replay check
@@ -86,6 +87,23 @@ if not winners:
           file=sys.stderr)
     sys.exit(1)
 print(f"frontier gate ok: {', '.join(winners)} beat sync", file=sys.stderr)
+EOF
+    python -m benchmarks.run --quick --only obs "$@"
+    # gate: the telemetry spine must stay effectively free on the hot
+    # path — instrumented Trainer step latency within 5% of bare at
+    # n=158 (min-of-repeats on both sides)
+    python - <<'EOF'
+import json, sys
+d = json.load(open("BENCH_obs.json"))
+rows = {r["n_workers"]: r for r in d["step"]}
+r = rows[158]
+if r["overhead_frac"] > 0.05:
+    print(f"obs REGRESSION: instrumented step {r['instrumented_us']:.1f}us "
+          f"vs bare {r['bare_us']:.1f}us at n=158 "
+          f"({r['overhead_frac'] * 100:+.1f}% > 5%)", file=sys.stderr)
+    sys.exit(1)
+print(f"obs gate ok: step overhead {r['overhead_frac'] * 100:+.1f}% "
+      f"at n=158 (<= 5%)", file=sys.stderr)
 EOF
     exit 0
 fi

@@ -19,7 +19,10 @@ Entries:
   width (J=3, widths 4/6/8 padded to 8);
 * ``train_step[mask_agg=weights]`` / ``train_step[mask_agg=psum]`` —
   both aggregation paths of the donated train step on the tiny bench
-  config.
+  config;
+* ``obs_ring_push`` — the telemetry spine's per-step device write
+  (``obs.metrics._ring_push``): one donated scatter-write, so attaching
+  an ``ObsRun`` provably adds zero host syncs to the hot loop.
 
 ``run_audit`` returns the report dict and ``write_report`` pins it to
 ``ANALYSIS.json`` (schema-guarded by ``tests/test_lint_clean.py``).
@@ -190,10 +193,26 @@ def _train_entries() -> List[Dict]:
     return out
 
 
+def _obs_entry() -> Dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.obs.metrics import _ring_push
+
+    cap, k = 256, 4
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    args = (f32(cap, k), jax.ShapeDtypeStruct((), np.int32),
+            tuple(f32() for _ in range(k)))
+    return _audit_lowered("obs_ring_push", _ring_push, args,
+                          expect_donation=True)
+
+
 def run_audit() -> Dict:
     import jax
 
-    entries = [_fused_entry(), _ragged_entry()] + _train_entries()
+    entries = ([_fused_entry(), _ragged_entry()] + _train_entries()
+               + [_obs_entry()])
     ok = all(e["transfer_free"] and e["donation"]["effective"]
              for e in entries)
     return {"version": SCHEMA_VERSION,

@@ -39,7 +39,6 @@ from typing import Callable, Iterator, List, Optional
 EVENT_KINDS = (
     "heartbeat", "suspect", "dead", "rejoin", "membership", "restart",
     "restart_failed", "evict", "kill", "recover", "fault",
-    # reprolint: disable=event-kind-drift -- optional high-volume kind: drivers MAY log per-step decisions; no in-tree emitter on purpose
     "decision",
     "run",
 )
@@ -79,7 +78,14 @@ class EventLog:
     the control plane is a single logical clock, and an out-of-order
     tick is a driver bug the stream's consumers (the drill assertions,
     the bench latency math) must be able to rule out.
+
+    ``KINDS`` is the kind registry ``emit`` validates against.
+    Subclasses with their own vocabulary (``repro.obs.trace.ObsLog``)
+    override it and inherit the seq/tick/JSONL machinery unchanged; the
+    ``event-kind-drift`` lint rule walks every registry it knows about.
     """
+
+    KINDS = EVENT_KINDS
 
     def __init__(self, path: Optional[str] = None, *,
                  clock: Callable[[], float] = time.time):
@@ -92,9 +98,10 @@ class EventLog:
 
     def emit(self, tick: int, kind: str, worker: Optional[int] = None,
              **data) -> Event:
-        if kind not in EVENT_KINDS:
+        kinds = type(self).KINDS
+        if kind not in kinds:
             raise ValueError(f"unknown event kind {kind!r} "
-                             f"(want one of {EVENT_KINDS})")
+                             f"(want one of {kinds})")
         tick = int(tick)
         if self._last_tick is not None and tick < self._last_tick:
             raise ValueError(

@@ -36,6 +36,7 @@ import os
 import signal
 import subprocess
 import sys
+from contextlib import nullcontext
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -290,8 +291,13 @@ class Supervisor:
                  grace: int = 0, restart_base: int = 2,
                  restart_cap: int = 16, restart_jitter: int = 0,
                  flap_limit: int = 3, seed: int = 0,
-                 log: Optional[EventLog] = None, start_tick: int = 0):
+                 log: Optional[EventLog] = None, start_tick: int = 0,
+                 obs=None):
         self.pool = pool
+        # optional repro.obs.ObsRun: tick spans are host perf_counter
+        # edges + host counters only — tick() is a lint hot root, and
+        # nothing here ever touches a device value
+        self.obs = obs
         self.log = log if log is not None else EventLog()
         self.monitor = HeartbeatMonitor(
             pool.worker_ids(), suspect_after=suspect_after,
@@ -317,17 +323,26 @@ class Supervisor:
     def tick(self, tick: int) -> bool:
         """One control-plane step; returns True if membership changed."""
         tick = int(tick)
-        self.pool.pump(tick, self.monitor, self.log)
-        for wid, _old, new in self.monitor.advance(tick):
-            if new == DEAD:
-                self._on_dead(wid, tick)
-        self._advance_restarts(tick)
-        m = self.monitor.members()
-        changed = not np.array_equal(m, self._members)
-        if changed:
-            self.log.emit(tick, "membership", n=len(m),
-                          members=[int(w) for w in m])
-            self._members = m
+        span = (self.obs.trace.span("supervisor.tick", track="controlplane",
+                                    tick=tick)
+                if self.obs is not None else nullcontext())
+        with span:
+            self.pool.pump(tick, self.monitor, self.log)
+            for wid, _old, new in self.monitor.advance(tick):
+                if new == DEAD:
+                    self._on_dead(wid, tick)
+            self._advance_restarts(tick)
+            m = self.monitor.members()
+            changed = not np.array_equal(m, self._members)
+            if changed:
+                self.log.emit(tick, "membership", n=len(m),
+                              members=[int(w) for w in m])
+                self._members = m
+            if self.obs is not None:
+                self.obs.metrics.counter("supervisor.ticks").inc()
+                if changed:
+                    self.obs.metrics.counter(
+                        "supervisor.membership_changes").inc()
         return changed
 
     # -- restart policy -------------------------------------------------
@@ -426,7 +441,14 @@ def drill_report(events) -> dict:
     failed attempts).  Faults that never produce a detection (e.g.
     slowdowns — the cutoff controller's case) are reported with
     ``detected: False``.
+
+    Aggregation runs on the obs metrics registry (host collectors:
+    ``Series``/``Counter``/``LabelSet``), which stores values at their
+    original types — so the report is bit-identical to the historical
+    ad-hoc dict accounting (``BENCH_controlplane.json`` pins this).
     """
+    # lazy import: controlplane is imported by obs's event layer
+    from repro.obs.metrics import MetricsRegistry
     faults = [e for e in events
               if e.kind == "fault" and e.worker is not None
               and e.data.get("fault") in ("crash", "hang")]
@@ -449,19 +471,29 @@ def drill_report(events) -> dict:
             "recovery_ticks": (rej.tick - dead.tick)
             if (dead and rej) else None,
         })
-    det = [i["detection_ticks"] for i in incidents if i["detected"]]
-    rec = [i["recovery_ticks"] for i in incidents
-           if i["recovery_ticks"] is not None]
+    reg = MetricsRegistry()
+    det = reg.series("detection_ticks")
+    rec = reg.series("recovery_ticks")
+    for i in incidents:
+        if i["detected"]:
+            det.observe(i["detection_ticks"])
+        if i["recovery_ticks"] is not None:
+            rec.observe(i["recovery_ticks"])
+    for e in events:
+        if e.kind == "restart":
+            reg.counter("restarts").inc()
+        elif e.kind == "restart_failed":
+            reg.counter("failed_restarts").inc()
+        elif e.kind == "evict":
+            reg.labels("evicted").add(e.worker)
     return {
         "incidents": incidents,
         "n_faults": len(faults),
-        "n_detected": len(det),
-        "max_detection_ticks": max(det) if det else None,
-        "mean_detection_ticks": (sum(det) / len(det)) if det else None,
-        "mean_recovery_ticks": (sum(rec) / len(rec)) if rec else None,
-        "restarts": len([e for e in events if e.kind == "restart"]),
-        "failed_restarts": len([e for e in events
-                                if e.kind == "restart_failed"]),
-        "evicted": sorted({e.worker for e in events
-                           if e.kind == "evict"}),
+        "n_detected": det.count,
+        "max_detection_ticks": det.max(),
+        "mean_detection_ticks": det.mean(),
+        "mean_recovery_ticks": rec.mean(),
+        "restarts": reg.counter("restarts").value,
+        "failed_restarts": reg.counter("failed_restarts").value,
+        "evicted": reg.labels("evicted").values(),
     }

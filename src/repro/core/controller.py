@@ -198,6 +198,10 @@ class _PolicyWrapper:
         fn = getattr(self.inner, "predicted_order_stats", None)
         return fn() if fn is not None else None
 
+    def predicted_samples(self):
+        fn = getattr(self.inner, "predicted_samples", None)
+        return fn() if fn is not None else None
+
     def window_array(self) -> np.ndarray:
         fn = getattr(self.inner, "window_array", None)
         if fn is None:
@@ -681,6 +685,16 @@ class CutoffController:
         # the ONLY host/device sync on the decision path: one int32
         return int(cutoff)
 
+    def predicted_samples(self):
+        """The predictive sample cloud (K, n) behind the decision just
+        made — a LAZY peek for the obs decision-quality layer: the device
+        backend returns the device array unfetched (the obs drain
+        materializes it in batch), the numpy backend its host samples.
+        None before warmup and after ``observe`` consumed the cache."""
+        if self._pending_pred is None:
+            return None
+        return self._pending_pred[2]
+
     def predicted_iter_time(self):
         """Posterior-predictive E[x_(c)] of the step just decided (raw
         seconds) — what the multi-tenant scheduler ranks jobs by; None
@@ -968,6 +982,11 @@ class ElasticController:
     def predicted_order_stats(self):
         if self._dmm is not None:
             return self._dmm.predicted_order_stats()
+        return None
+
+    def predicted_samples(self):
+        if self._dmm is not None:
+            return self._dmm.predicted_samples()
         return None
 
     def observe(self, times, finished_mask=None):

@@ -31,7 +31,7 @@ import sys
 # ---------------------------------------------------------------------------
 
 
-def run_churn_demo(steps: int = 60, seed: int = 0) -> dict:
+def run_churn_demo(steps: int = 60, seed: int = 0, obs=None) -> dict:
     import jax
     import numpy as np
 
@@ -44,6 +44,7 @@ def run_churn_demo(steps: int = 60, seed: int = 0) -> dict:
     from repro.data.pipeline import SyntheticTokens
     from repro.launch.train import Trainer, clock_to_loss, jit_train_step
     from repro.models import model as M
+    from repro.obs import ObsRun
 
     cfg = bench_tiny_config()
     n = 8
@@ -72,19 +73,26 @@ def run_churn_demo(steps: int = 60, seed: int = 0) -> dict:
 
     mid = (shrink_at + recover_at) // 2   # a ckpt lands mid-churn
 
-    def make_trainer(ctl, timer, ckpt=None):
+    def make_trainer(ctl, timer, ckpt=None, run_obs=None, name=None):
         data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
                                global_batch=24, seed=seed)
         tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=ctl,
                      timer=timer, n_workers=timer.n_workers, ckpt_dir=ckpt,
-                     ckpt_every=mid)
+                     ckpt_every=mid, obs=run_obs, name=name)
         return tr.restore_or_init(init_fn)
 
     print(f"=== churn run: n {n} -> 6 at step {shrink_at}, "
           f"-> {n} at step {recover_at} ===")
+    # the elastic trainer records to the caller's obs run (or an
+    # in-memory one); the sync baseline gets its OWN in-memory run so
+    # each step stream holds exactly one trajectory — clock_to_loss
+    # reads both straight from the obs recorders
+    obs_el = obs if obs is not None else ObsRun()
+    obs_sync = ObsRun()
     ctl = ElasticController(rm, k_samples=32, seed=seed, refit_steps=60)
     ctl.seed_window(trace[-40:])
-    tr = make_trainer(ctl, make_timer(), ckpt=ckpt_dir)
+    tr = make_trainer(ctl, make_timer(), ckpt=ckpt_dir, run_obs=obs_el,
+                      name="elastic")
     tr.run(recover_at - 1)                # shrink fires; ckpt at width 6
 
     print("=== restart from the mid-churn checkpoint ===")
@@ -114,12 +122,13 @@ def run_churn_demo(steps: int = 60, seed: int = 0) -> dict:
     assert 6 in widths and 8 in widths, "churn did not fire"
 
     print("=== full-sync baseline on the identical churn schedule ===")
-    sync = make_trainer(FullSyncController(n), make_timer())
+    sync = make_trainer(FullSyncController(n), make_timer(),
+                        run_obs=obs_sync, name="sync")
     sync.run(steps)
 
-    target = float(np.mean([h["loss"] for h in sync.history[-3:]]))
-    t_el = clock_to_loss(tr.history, target)
-    t_sync = clock_to_loss(sync.history, target)
+    target = sync.obs.steps.final_loss(window=3)
+    t_el = clock_to_loss(tr.obs.steps, target)
+    t_sync = clock_to_loss(sync.obs.steps, target)
     fmt = lambda v: "n/a" if v is None else f"{v:.1f}s"
     print(f"  wall-clock to sync's final loss: elastic {fmt(t_el)} "
           f"vs full-sync {fmt(t_sync)}")
@@ -203,11 +212,22 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-dir", default=None,
+                    help="write obs telemetry streams (spans/steps/"
+                         "decisions/metrics JSONL) under this directory")
     args = ap.parse_args()
     if args.aot:
         run_aot(args.arch)
     else:
-        run_churn_demo(steps=args.steps, seed=args.seed)
+        obs = None
+        if args.obs_dir:
+            from repro.obs import ObsRun
+            obs = ObsRun(args.obs_dir)
+        run_churn_demo(steps=args.steps, seed=args.seed, obs=obs)
+        if obs is not None:
+            obs.close()
+            print(f"obs streams -> {args.obs_dir} "
+                  f"(render: python -m repro.obs {args.obs_dir})")
 
 
 if __name__ == "__main__":

@@ -41,9 +41,16 @@ def build_multi_job(n_jobs: int = 3, n_per_job: int = 8, *,
                     fit_steps: int = 120, churn_events=(),
                     priorities=None, global_batch: int = 24,
                     refit_steps: int = 100, refit_fresh: int = 3,
-                    refit_async: bool = False, metrics_every: int = 10):
+                    refit_async: bool = False, metrics_every: int = 10,
+                    obs=None):
     """J seeded tiny Trainers over a partitioned paper cluster, one
-    shared PSServer.  Returns (server, jobs dict, sim)."""
+    shared PSServer.  Returns (server, jobs dict, sim).
+
+    ``obs`` (a :class:`repro.obs.ObsRun`) instruments the server's flush
+    dispatches, every trainer's step loop (``Trainer.name`` = job id, so
+    the interleaved step stream stays attributable), and wraps each
+    job's handle in the decision-quality recorder — decisions are
+    bit-identical with it attached."""
     import jax
 
     from repro import optim
@@ -64,7 +71,7 @@ def build_multi_job(n_jobs: int = 3, n_per_job: int = 8, *,
     sim = PartitionedSim(base, partition_ids(n_total, n_jobs),
                          events=list(churn_events))
     server = PSServer(refit_steps=refit_steps, refit_fresh=refit_fresh,
-                      refit_async=refit_async)
+                      refit_async=refit_async, obs=obs)
     jobs: Dict[str, JobRun] = {}
     for j in range(n_jobs):
         job_id = f"job{j}"
@@ -83,9 +90,10 @@ def build_multi_job(n_jobs: int = 3, n_per_job: int = 8, *,
         view = sim.view(j)
         data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
                                global_batch=global_batch, seed=seed + j)
-        tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=handle,
+        ctl = obs.wrap(handle, policy=job_id) if obs is not None else handle
+        tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=ctl,
                      timer=view, n_workers=n_per_job, members=ids,
-                     metrics_every=metrics_every)
+                     metrics_every=metrics_every, obs=obs, name=job_id)
 
         def init_fn(jj=j):
             params = M.init_model(cfg, jax.random.PRNGKey(seed + jj))
@@ -102,23 +110,31 @@ def run_ticks(server, jobs: Dict[str, JobRun], scheduler, ticks: int, *,
     """The multi-tenant hot loop: schedule -> prefetch -> serve -> flush.
 
     Returns per-tick service lists plus aggregate counters."""
+    from contextlib import nullcontext
+
     from repro.ps.scheduler import job_views
 
+    obs = getattr(server, "obs", None)
     schedule_log: List[List[str]] = []
     serviced = {job_id: 0 for job_id in jobs}
     d0 = server.dispatches
     for tick in range(ticks):
-        order = scheduler.order(job_views(server), capacity)
-        server.prefetch(order)
-        for job_id in order:
-            jobs[job_id].trainer.run(1)
-            jobs[job_id].serviced += 1
-            serviced[job_id] += 1
-        server.flush()
+        span = (obs.trace.span("multi_job.tick", track="driver", tick=tick)
+                if obs is not None else nullcontext())
+        with span:
+            order = scheduler.order(job_views(server), capacity)
+            server.prefetch(order)
+            for job_id in order:
+                jobs[job_id].trainer.run(1)
+                jobs[job_id].serviced += 1
+                serviced[job_id] += 1
+            server.flush()
         schedule_log.append(order)
         if verbose and (tick + 1) % 10 == 0:
             modes = {j.job_id: j.handle.mode for j in jobs.values()}
             print(f"  tick {tick + 1}: serviced={order} modes={modes}")
+    if obs is not None:
+        obs.drain()
     return {"schedule": schedule_log,
             "dispatches": server.dispatches - d0,
             "serviced": serviced}
@@ -134,9 +150,13 @@ def main():
     ap.add_argument("--policy", default="rr",
                     choices=["rr", "priority", "spsf"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-dir", default=None,
+                    help="write obs telemetry streams (spans/steps/"
+                         "decisions/metrics JSONL) under this directory")
     args = ap.parse_args()
 
     from repro.cluster.simulator import ChurnEvent
+    from repro.obs import ObsRun
     from repro.ps import make_scheduler
 
     kill_at = args.ticks // 3
@@ -147,12 +167,17 @@ def main():
               ChurnEvent(step=back_at, restore=tuple(victim))]
     print(f"=== building {args.jobs} jobs x {args.workers_per_job} workers, "
           f"churn kills {victim} at tick {kill_at} ===")
+    obs = ObsRun(args.obs_dir) if args.obs_dir else None
     server, jobs, _ = build_multi_job(
         args.jobs, args.workers_per_job, seed=args.seed,
-        churn_events=events if args.jobs > 1 else ())
+        churn_events=events if args.jobs > 1 else (), obs=obs)
     sched = make_scheduler(args.policy)
     out = run_ticks(server, jobs, sched, args.ticks,
                     capacity=args.capacity, verbose=True)
+    if obs is not None:
+        obs.close()
+        print(f"obs streams -> {args.obs_dir} "
+              f"(render: python -m repro.obs {args.obs_dir})")
     print(f"=== {args.ticks} ticks, {out['dispatches']} fused dispatches "
           f"({out['dispatches'] / max(1, args.ticks):.2f}/tick) ===")
     for job_id, run in jobs.items():

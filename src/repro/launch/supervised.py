@@ -50,7 +50,7 @@ def build_supervised(n_workers: int, plan: Optional[FaultPlan] = None, *,
                      event_path: Optional[str] = None,
                      suspect_after: int = 2, dead_after: int = 4,
                      restart_base: int = 2, restart_cap: int = 16,
-                     flap_limit: int = 3):
+                     flap_limit: int = 3, obs=None):
     """The supervised stack minus the Trainer: (overlay, supervisor, timer).
 
     The overlay wraps a fresh paper-cluster sim; the injector (if a plan
@@ -65,7 +65,7 @@ def build_supervised(n_workers: int, plan: Optional[FaultPlan] = None, *,
     sup = Supervisor(pool, suspect_after=suspect_after,
                      dead_after=dead_after, restart_base=restart_base,
                      restart_cap=restart_cap, flap_limit=flap_limit,
-                     seed=seed, log=log)
+                     seed=seed, log=log, obs=obs)
     return overlay, sup, SupervisedTimer(overlay, sup)
 
 
@@ -173,7 +173,7 @@ def default_plan(n_workers: int, start: int = 12) -> FaultPlan:
 
 
 def run_supervised(steps: int = 60, seed: int = 0, n_workers: int = 6,
-                   verbose: bool = True) -> dict:
+                   verbose: bool = True, obs=None) -> dict:
     import jax
 
     from repro import optim
@@ -204,8 +204,11 @@ def run_supervised(steps: int = 60, seed: int = 0, n_workers: int = 6,
     if verbose:
         print(f"=== supervised run: {n_workers} workers, seeded storm "
               f"({len(plan.faults)} faults) ===")
-    overlay, sup, timer = build_supervised(n_workers, plan, seed=seed)
+    overlay, sup, timer = build_supervised(n_workers, plan, seed=seed,
+                                           obs=obs)
     tr = make_trainer(timer)
+    if obs is not None:
+        tr.obs = obs
     run_supervised_trainer(tr, sup, steps)
     report = drill_report(sup.log.events)
     if verbose:
@@ -243,9 +246,18 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workers", type=int, default=6)
+    ap.add_argument("--obs-dir", default=None,
+                    help="write obs telemetry streams (spans/steps/"
+                         "decisions/metrics JSONL) under this directory")
     args = ap.parse_args()
+    from repro.obs import ObsRun
+    obs = ObsRun(args.obs_dir) if args.obs_dir else None
     out = run_supervised(steps=args.steps, seed=args.seed,
-                         n_workers=args.workers)
+                         n_workers=args.workers, obs=obs)
+    if obs is not None:
+        obs.close()
+        print(f"obs streams -> {args.obs_dir} "
+              f"(render: python -m repro.obs {args.obs_dir})")
     return 0 if out["match"] else 1
 
 

@@ -379,19 +379,25 @@ def clock_to_loss(history, target: float, window: int = 3):
     """Simulated wall-clock until the ``window``-step trailing mean loss
     reaches ``target``; None if the run never gets there.
 
-    THE wall-clock-to-loss metric for Trainer histories — the acceptance
-    tests, benches and demos all share this one implementation (losses
-    must already be drained floats, i.e. after ``run()`` returned).
+    THE wall-clock-to-loss metric for Trainer trajectories — the
+    acceptance tests, benches and demos all share this one
+    implementation.  ``history`` is either a list of step records or the
+    obs step stream (``repro.obs.StepStream`` — anything with a
+    ``records`` attribute): benches that attach an ``ObsRun`` read the
+    trajectory straight from the one recorder instead of re-threading
+    their own ``(t, loss)`` lists.  Losses must already be drained
+    floats, i.e. after ``run()`` returned.
 
     Only FULL windows are eligible: the first ``window - 1`` steps cannot
     trigger the target (a partial early window is a mean over fewer
     losses, so one lucky first step used to fire the target a true
     trailing mean would not).
     """
-    losses = [h["loss"] for h in history]
+    records = getattr(history, "records", history)
+    losses = [h["loss"] for h in records]
     for i in range(window - 1, len(losses)):
         if np.mean(losses[i - window + 1:i + 1]) <= target:
-            return history[i]["clock"]
+            return records[i]["clock"]
     return None
 
 
@@ -445,6 +451,14 @@ class Trainer:
     ckpt_every: int = 50
     keep: int = 3
     metrics_every: int = 10
+
+    # telemetry (optional): an ``repro.obs.ObsRun``.  Attaching one adds
+    # spans around the step phases, one device metric-ring push per step,
+    # and forwards drained history records to the obs step stream — and
+    # NOTHING else: decisions, RNG streams and parameters stay
+    # bit-identical with obs on or off (tests/test_obs.py pins this).
+    obs: Any = None
+    name: Optional[str] = None                # job/run label for obs streams
 
     state: Dict = None
     step: int = 0
@@ -578,96 +592,134 @@ class Trainer:
         self.resize(w, col_map=col_map, members=ids)
 
     def _drain_metrics(self):
-        """Fetch every pending device-side loss into its history record."""
+        """Fetch every pending device-side loss into its history record
+        (and forward the now-host-resident records to the obs step
+        stream — the one recorder every trajectory consumer reads)."""
         for rec in self._pending_metrics:
             rec["loss"] = float(rec["loss"])
+            if self.obs is not None:
+                self.obs.steps.on_step(rec, job=self.name)
         self._pending_metrics.clear()
+        if self.obs is not None:
+            # the obs drain rides the same boundary as the loss fetch:
+            # decision scoring + device metric rings come back here, and
+            # ONLY here — never inside the step
+            with self.obs.trace.span("obs.drain", track="trainer",
+                                     step=self.step):
+                self.obs.drain()
 
     def run(self, n_steps: int, *, eval_fn=None, eval_every: int = 0,
             verbose: bool = False):
+        from contextlib import nullcontext
         from repro.checkpoint import store
         ckpt = (store.AsyncCheckpointer(self.ckpt_dir, self.keep)
                 if self.ckpt_dir else None)
+        null = nullcontext()
+        tracer = self.obs.trace if self.obs is not None else None
+        ring = (self.obs.metrics.ring(
+            "trainer" if self.name is None else f"trainer[{self.name}]",
+            ("loss", "gnorm", "c", "iter_time"))
+            if self.obs is not None else None)
         for _ in range(n_steps):
-            self._sync_membership()     # elastic: follow the timer's width
-            n = self.n_workers
-            c = int(self.controller.predict_cutoff())
-            c = min(c, n)
-            times = (self.timer.step() if self.timer is not None
-                     else np.ones(n))
-            # fastest c workers participate (the PS's bit array)
-            order = np.argsort(times)
-            mask = np.zeros(n, np.float32)
-            mask[order[:c]] = 1.0
-            iter_time = float(times[order[c - 1]])
-            # the controller must see the SAME worker set the aggregation
-            # used: under ties, a times<=iter_time threshold marks MORE
-            # than c workers finished and the two views diverge
-            finished = mask.astype(bool)
+            step_span = (tracer.span("trainer.step", track="trainer",
+                                     step=self.step + 1, job=self.name)
+                         if tracer is not None else null)
+            with step_span:
+                self._sync_membership()  # elastic: follow the timer's width
+                n = self.n_workers
+                with (tracer.span("controller.predict_cutoff",
+                                  track="trainer")
+                      if tracer is not None else null):
+                    c = int(self.controller.predict_cutoff())
+                c = min(c, n)
+                times = (self.timer.step() if self.timer is not None
+                         else np.ones(n))
+                # fastest c workers participate (the PS's bit array)
+                order = np.argsort(times)
+                mask = np.zeros(n, np.float32)
+                mask[order[:c]] = 1.0
+                iter_time = float(times[order[c - 1]])
+                # the controller must see the SAME worker set the
+                # aggregation used: under ties, a times<=iter_time
+                # threshold marks MORE than c workers finished and the
+                # two views diverge
+                finished = mask.astype(bool)
 
-            # anytime policy: stragglers contribute their completed
-            # fraction instead of a zeroed bit; finishers stay exactly 1.0
-            contrib = mask
-            if hasattr(self.controller, "contribution"):
-                contrib = np.asarray(
-                    self.controller.contribution(times, c), np.float32)
+                # anytime policy: stragglers contribute their completed
+                # fraction instead of a zeroed bit; finishers stay 1.0
+                contrib = mask
+                if hasattr(self.controller, "contribution"):
+                    contrib = np.asarray(
+                        self.controller.contribution(times, c), np.float32)
 
-            batch = dict(self.data.batch(self.step))
-            if self.mask_agg == "psum":
-                batch["mask"] = jnp.asarray(contrib)
-            else:
-                batch["weights"] = collectives.example_weights(
-                    contrib, batch["tokens"].shape[0])
-            decay = getattr(self.controller, "stale_decay", None)
-            if decay is not None:
-                if self.mask_agg != "psum":
-                    raise ValueError(
-                        "StaleReuseController needs mask_agg='psum' (the "
-                        "weights path never materializes a dropped "
-                        "worker's gradient to buffer)")
-                if self._stale is None:
-                    zeros = jax.tree.map(
-                        lambda p: jnp.zeros(p.shape, jnp.float32),
-                        self.state["params"])
-                    self._stale = (zeros, jnp.float32(0))
-                stale_g, stale_d = self._stale
-                batch["stale_g"] = stale_g
-                # decayed weight of the buffered mean: decay per worker
-                # that contributed to it, kept lazy on device (no sync)
-                batch["stale_w"] = jnp.float32(decay) * stale_d
-            # dispatch the train step FIRST (async), then run the PS's
-            # observe/imputation so controller inference overlaps compute
-            self.state, metrics = self.step_fn(self.state, batch)
-            if decay is not None:
-                if "stale" not in metrics:
-                    raise ValueError(
-                        "StaleReuseController needs a step_fn built with "
-                        "make_train_step(..., mask_agg='psum', "
-                        "stale_reuse=True) — this one returned no "
-                        "metrics['stale'] buffer")
-                self._stale = metrics.pop("stale")
-            self.controller.observe(times, finished)
-            self.step += 1
-            self.sim_clock += iter_time
-            rec = {"step": self.step, "clock": self.sim_clock, "c": c,
-                   "n": n, "iter_time": iter_time,
-                   "loss": metrics["loss"]}   # device scalar, drained later
-            self.history.append(rec)
-            self._pending_metrics.append(rec)
-            if self.metrics_every and self.step % self.metrics_every == 0:
-                self._drain_metrics()
-            if eval_fn and eval_every and self.step % eval_every == 0:
-                self._drain_metrics()
-                rec["eval"] = float(eval_fn(self.state))
-            if verbose and self.step % 20 == 0:
-                self._drain_metrics()
-                print(f"  step {self.step}: loss={rec['loss']:.4f} c={c}/{n}"
-                      f" t={iter_time:.3f}s clock={self.sim_clock:.1f}s")
-            if ckpt and self.step % self.ckpt_every == 0:
-                ckpt.save(self.step, {
-                    "state": self.state,
-                    "meta": {"step": self.step, "clock": self.sim_clock},
-                    "ctl": self._controller_ckpt()})
+                batch = dict(self.data.batch(self.step))
+                if self.mask_agg == "psum":
+                    batch["mask"] = jnp.asarray(contrib)
+                else:
+                    batch["weights"] = collectives.example_weights(
+                        contrib, batch["tokens"].shape[0])
+                decay = getattr(self.controller, "stale_decay", None)
+                if decay is not None:
+                    if self.mask_agg != "psum":
+                        raise ValueError(
+                            "StaleReuseController needs mask_agg='psum' "
+                            "(the weights path never materializes a "
+                            "dropped worker's gradient to buffer)")
+                    if self._stale is None:
+                        zeros = jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32),
+                            self.state["params"])
+                        self._stale = (zeros, jnp.float32(0))
+                    stale_g, stale_d = self._stale
+                    batch["stale_g"] = stale_g
+                    # decayed weight of the buffered mean: decay per
+                    # worker that contributed to it, kept lazy on device
+                    batch["stale_w"] = jnp.float32(decay) * stale_d
+                # dispatch the train step FIRST (async), then run the
+                # PS's observe/imputation so controller inference
+                # overlaps compute
+                with (tracer.span("train.dispatch", track="trainer")
+                      if tracer is not None else null):
+                    self.state, metrics = self.step_fn(self.state, batch)
+                if decay is not None:
+                    if "stale" not in metrics:
+                        raise ValueError(
+                            "StaleReuseController needs a step_fn built "
+                            "with make_train_step(..., mask_agg='psum', "
+                            "stale_reuse=True) — this one returned no "
+                            "metrics['stale'] buffer")
+                    self._stale = metrics.pop("stale")
+                with (tracer.span("controller.observe", track="trainer")
+                      if tracer is not None else null):
+                    self.controller.observe(times, finished)
+                self.step += 1
+                self.sim_clock += iter_time
+                rec = {"step": self.step, "clock": self.sim_clock, "c": c,
+                       "n": n, "iter_time": iter_time,
+                       "loss": metrics["loss"]}  # device scalar; drained
+                self.history.append(rec)
+                self._pending_metrics.append(rec)
+                if ring is not None:
+                    # ONE donated in-jit push; loss/gnorm stay lazy
+                    ring.push((metrics["loss"], metrics["gnorm"],
+                               float(c), iter_time))
+                if (self.metrics_every
+                        and self.step % self.metrics_every == 0):
+                    self._drain_metrics()
+                if eval_fn and eval_every and self.step % eval_every == 0:
+                    self._drain_metrics()
+                    rec["eval"] = float(eval_fn(self.state))
+                if verbose and self.step % 20 == 0:
+                    self._drain_metrics()
+                    print(f"  step {self.step}: loss={rec['loss']:.4f} "
+                          f"c={c}/{n} t={iter_time:.3f}s "
+                          f"clock={self.sim_clock:.1f}s")
+                if ckpt and self.step % self.ckpt_every == 0:
+                    ckpt.save(self.step, {
+                        "state": self.state,
+                        "meta": {"step": self.step,
+                                 "clock": self.sim_clock},
+                        "ctl": self._controller_ckpt()})
         self._drain_metrics()
         if ckpt:
             ckpt.wait()

@@ -1,0 +1,19 @@
+"""repro.obs — the zero-sync telemetry spine.
+
+Device-side metric rings, host-edge span tracing, and decision-quality
+scoring for every cutoff policy; see ``src/repro/obs/README.md`` for
+the contracts (ring drain rules, span schema, calibration definitions).
+"""
+from repro.obs.metrics import (Counter, Gauge, LabelSet, MetricHistogram,
+                               MetricRing, MetricsRegistry, Series)
+from repro.obs.quality import (DecisionRecorder, QualityController,
+                               score_decision)
+from repro.obs.run import ObsRun, StepStream
+from repro.obs.trace import OBS_KINDS, ObsLog, Tracer, chrome_trace
+
+__all__ = [
+    "Counter", "Gauge", "LabelSet", "MetricHistogram", "MetricRing",
+    "MetricsRegistry", "Series", "DecisionRecorder", "QualityController",
+    "score_decision", "ObsRun", "StepStream", "OBS_KINDS", "ObsLog",
+    "Tracer", "chrome_trace",
+]

@@ -1,0 +1,274 @@
+"""Metrics registry: device-resident rings that never sync the hot path.
+
+Two halves, split by WHERE the value lives:
+
+* **Device collectors** (:class:`MetricRing`, :class:`MetricHistogram`)
+  accumulate in-jit.  ``push``/``add`` dispatch ONE donated jit that
+  scatter-writes into a fixed f32 buffer — the same pattern as the
+  controller's lag-window ring (``core.controller._ring_append``): the
+  value being recorded may be a lazy device scalar straight out of
+  ``train_step`` and it is never materialized on the host.  The buffers
+  come back only at :meth:`MetricsRegistry.drain` — the ``metrics_every``
+  boundary where the Trainer already batch-fetches its loss scalars.
+* **Host collectors** (:class:`Counter`, :class:`Gauge`, :class:`Series`,
+  :class:`LabelSet`) are plain-python bookkeeping (``+=`` on ints) and
+  are therefore safe inside reprolint hot roots (``Supervisor.tick``,
+  ``PSServer.flush``): they can never introduce a device sync because
+  they never touch a device value.
+
+Ring drain contract (pinned by ``tests/test_obs.py``):
+
+* rows come back OLDEST-FIRST, exactly the rows pushed since the last
+  drain;
+* a ring that overflowed between drains drops the OLDEST rows — the ring
+  keeps the most recent ``cap`` — and the drain payload counts what it
+  dropped (``dropped``), so truncation is never silent;
+* ``drain`` is the only operation that reads a device buffer.  ``push``
+  is fire-and-forget and a counter of pushes is kept on the host, which
+  is how ``dropped`` is computed without a sync.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _ring_push(ring, head, vals):
+    """ONE dispatch per recorded row: stack the (possibly lazy device)
+    scalars in-jit and scatter-write them at the ring head.  ``ring`` and
+    ``head`` are donated — pushing re-uses the buffer it replaces, and the
+    jaxpr audit (``ANALYSIS.json`` entry ``obs_ring_push``) pins that the
+    lowering stays transfer-free with the aliasing effective."""
+    row = jnp.stack([jnp.asarray(v, jnp.float32) for v in vals])
+    return ring.at[head].set(row), (head + 1) % ring.shape[0]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _hist_add(counts, edges, x):
+    """Scatter-add one sample into a fixed-edge histogram, in-jit."""
+    i = jnp.searchsorted(edges, jnp.asarray(x, jnp.float32))
+    return counts.at[i].add(1.0)
+
+
+class MetricRing:
+    """A (cap, k) f32 device ring of metric rows; see the module
+    docstring for the drain contract."""
+
+    def __init__(self, name: str, columns: Sequence[str], cap: int = 256):
+        if cap < 1:
+            raise ValueError(f"ring cap must be >= 1, got {cap}")
+        self.name = name
+        self.columns = tuple(columns)
+        self.cap = int(cap)
+        self._ring = jnp.zeros((self.cap, len(self.columns)), jnp.float32)
+        self._head = jnp.zeros((), jnp.int32)
+        self._pushed = 0          # host-side, so drain never syncs to count
+        self._drained = 0
+
+    def push(self, vals):
+        """Record one row (tuple matching ``columns``).  Values may be
+        lazy device scalars; nothing is fetched."""
+        if len(vals) != len(self.columns):
+            raise ValueError(f"ring {self.name!r} wants "
+                             f"{len(self.columns)} values, got {len(vals)}")
+        self._ring, self._head = _ring_push(self._ring, self._head,
+                                            tuple(vals))
+        self._pushed += 1
+
+    @property
+    def pushed(self) -> int:
+        return self._pushed
+
+    def drain(self) -> Optional[dict]:
+        """Fetch the rows pushed since the last drain (oldest first).
+
+        Returns ``None`` when nothing was pushed.  Overflow drops the
+        oldest rows and reports how many (``dropped``)."""
+        fresh = self._pushed - self._drained
+        if fresh == 0:
+            return None
+        dropped = max(0, fresh - self.cap)
+        take = fresh - dropped
+        w = np.asarray(self._ring)
+        head = int(np.asarray(self._head))
+        rows = np.roll(w, -head, axis=0)[self.cap - take:]
+        self._drained = self._pushed
+        return {"name": self.name, "columns": list(self.columns),
+                "rows": rows.tolist(), "pushed": self._pushed,
+                "dropped": dropped}
+
+
+class MetricHistogram:
+    """Fixed-edge f32 histogram accumulated on device by scatter-add."""
+
+    def __init__(self, name: str, edges: Sequence[float]):
+        self.name = name
+        self._edges = jnp.asarray(np.asarray(edges, np.float32))
+        self._counts = jnp.zeros(len(edges) + 1, jnp.float32)
+        self._added = 0
+        self._drained = 0
+
+    def add(self, x):
+        self._counts = _hist_add(self._counts, self._edges, x)
+        self._added += 1
+
+    def drain(self) -> Optional[dict]:
+        if self._added == self._drained:
+            return None
+        self._drained = self._added
+        return {"name": self.name,
+                "edges": np.asarray(self._edges).tolist(),
+                "counts": np.asarray(self._counts).tolist(),
+                "added": self._added}
+
+
+class Counter:
+    """Host-side monotone counter (safe in lint hot roots)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, by: int = 1):
+        self.value += by
+
+
+class Gauge:
+    """Host-side last-value gauge."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = None
+
+    def set(self, v):
+        self.value = v
+
+
+class Series:
+    """Host-side value list with summary stats.
+
+    Values are stored as given (ints stay ints), so aggregates like
+    ``max`` round-trip bit-identically through JSON — the property
+    ``Supervisor.drill_report`` relies on to keep
+    ``BENCH_controlplane.json`` stable."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: list = []
+
+    def observe(self, v):
+        self.values.append(v)
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def max(self):
+        return max(self.values) if self.values else None
+
+    def mean(self):
+        return sum(self.values) / len(self.values) if self.values else None
+
+
+class LabelSet:
+    """Host-side set of labels (e.g. evicted worker ids)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._seen: set = set()
+
+    def add(self, label):
+        self._seen.add(label)
+
+    def values(self) -> list:
+        return sorted(self._seen)
+
+
+class MetricsRegistry:
+    """Get-or-create registry over every collector kind.
+
+    One registry per :class:`~repro.obs.ObsRun`; the run drains the
+    device collectors at ``metrics_every`` boundaries and serializes the
+    payloads to the ``metrics.jsonl`` stream."""
+
+    def __init__(self):
+        self._rings: Dict[str, MetricRing] = {}
+        self._hists: Dict[str, MetricHistogram] = {}
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._series: Dict[str, Series] = {}
+        self._labels: Dict[str, LabelSet] = {}
+
+    def ring(self, name: str, columns: Sequence[str],
+             cap: int = 256) -> MetricRing:
+        r = self._rings.get(name)
+        if r is None:
+            r = self._rings[name] = MetricRing(name, columns, cap)
+        elif r.columns != tuple(columns):
+            raise ValueError(f"ring {name!r} re-registered with different "
+                             f"columns {tuple(columns)} != {r.columns}")
+        return r
+
+    def histogram(self, name: str,
+                  edges: Sequence[float]) -> MetricHistogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = MetricHistogram(name, edges)
+        return h
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name)
+        return g
+
+    def series(self, name: str) -> Series:
+        s = self._series.get(name)
+        if s is None:
+            s = self._series[name] = Series(name)
+        return s
+
+    def labels(self, name: str) -> LabelSet:
+        l = self._labels.get(name)
+        if l is None:
+            l = self._labels[name] = LabelSet(name)
+        return l
+
+    def drain(self) -> List[dict]:
+        """Fetch every device collector with fresh data (the ONLY reader
+        of device buffers — call at metrics boundaries, never per step)."""
+        out = []
+        for r in self._rings.values():
+            p = r.drain()
+            if p is not None:
+                out.append(dict(p, collector="ring"))
+        for h in self._hists.values():
+            p = h.drain()
+            if p is not None:
+                out.append(dict(p, collector="histogram"))
+        return out
+
+    def summary(self) -> dict:
+        """Host-only snapshot (no device fetch): counters, gauges, series
+        stats, label sets, and per-ring push/drain accounting."""
+        return {
+            "counters": {n: c.value for n, c in self._counters.items()},
+            "gauges": {n: g.value for n, g in self._gauges.items()},
+            "series": {n: {"count": s.count, "max": s.max(),
+                           "mean": s.mean()}
+                       for n, s in self._series.items()},
+            "labels": {n: l.values() for n, l in self._labels.items()},
+            "rings": {n: {"pushed": r.pushed, "cap": r.cap}
+                      for n, r in self._rings.items()},
+        }

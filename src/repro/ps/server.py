@@ -43,6 +43,7 @@ amortizes dispatch, it never changes the decision.
 from __future__ import annotations
 
 import functools
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -318,7 +319,7 @@ class PSServer:
                  history: int = 512, refit_steps: int = 150,
                  refit_batch: int = 8, refit_fresh: int = 4,
                  refit_async: bool = False, fallback_warmup: int = 3,
-                 refit_retries: int = 1):
+                 refit_retries: int = 1, obs=None):
         self.registry = registry if registry is not None else JobRegistry()
         self.history = history
         self.refit_steps = refit_steps
@@ -327,6 +328,11 @@ class PSServer:
         self.refit_async = refit_async
         self.fallback_warmup = fallback_warmup
         self.refit_retries = refit_retries
+        # optional repro.obs.ObsRun: flush/dispatch spans are host
+        # perf_counter edges only (they time DISPATCH, the async cost
+        # model) and refit-gate activity lands on host counters — with
+        # obs attached the decision sequence is bit-identical
+        self.obs = obs
         self._buckets: Dict[tuple, _Bucket] = {}
         self._queue: List[dict] = []
         self.dispatches = 0             # fused decision dispatches issued
@@ -652,53 +658,69 @@ class PSServer:
         masks + traced censor flags).  Returns the dispatches issued."""
         if not self._queue:
             return 0
-        queue, self._queue = self._queue, []
-        groups: Dict[tuple, list] = {}
-        for e in queue:
-            groups.setdefault(e["job"].bucket_sig, []).append(e)
-        issued = 0
-        for sig, entries in groups.items():
-            b = self._buckets[sig]
-            m, npd = len(entries), b.n_pad
-            # one packed upload: [times, mask, mu, std] + keys/steps/cen
-            pack = np.zeros((4, m, npd), np.float32)
-            pack[1] = 1.0       # pad columns read mask=True (write 0.0)
-            keys = np.empty((m, 4), np.uint32)
-            steps = np.empty((m,), np.uint32)
-            cen = np.empty((m,), bool)
-            for r, e in enumerate(entries):
-                w = e["job"].width
-                pack[0, r, :w] = e["times"]
-                pack[1, r, :w] = e["mask"]
-                if e["cen"]:
-                    pack[2, r, :w] = e["pred"][0][:w]
-                    pack[3, r, :w] = e["pred"][1][:w]
-                steps[r] = e["istep"]
-                cen[r] = e["cen"]
-            keys[:, :2] = C._prng_key_rows(
-                [e["job"].seed + e["dstep"] for e in entries])
-            keys[:, 2:] = C._prng_key_rows(
-                [e["job"].seed + 1_000_003 for e in entries])
-            params, scales, widths, los = b.stacked()
-            slots = [e["job"].slot for e in entries]
-            args = (jnp.asarray(pack), jnp.asarray(keys),
-                    jnp.asarray(steps), jnp.asarray(cen),
-                    scales, widths, los)
-            if slots == list(range(len(b.jobs))):
-                (b.rings, b.heads, cut, samp, mu, std, it) = (
-                    _full_observe_decide(params, b.rings, b.heads, *args,
-                                         k_samples=b.k_samples))
-            else:
-                idx = jnp.asarray(slots, jnp.int32)
-                (b.rings, b.heads, cut, samp, mu, std, it) = (
-                    _subset_observe_decide(params, b.rings, b.heads, idx,
-                                           *args, k_samples=b.k_samples))
-            issued += 1
-            out = {"cutoff": cut, "samples": samp, "mu": mu, "std": std,
-                   "iter": it}
-            for row, e in enumerate(entries):
-                e["job"].pending = (e["dstep"], row, out)
-                e["job"].queued = False
+        # spans stamp host perf_counter edges around the (async) dispatch
+        # calls; obs attrs are plain host ints already on the queue
+        # entries, so instrumentation adds zero device syncs here
+        tracer = self.obs.trace if self.obs is not None else None
+        fspan = (tracer.span("ps.flush", track="ps", tick=self.ticks,
+                             queued=len(self._queue))
+                 if tracer is not None else nullcontext())
+        with fspan:
+            queue, self._queue = self._queue, []
+            groups: Dict[tuple, list] = {}
+            for e in queue:
+                groups.setdefault(e["job"].bucket_sig, []).append(e)
+            issued = 0
+            for sig, entries in groups.items():
+                b = self._buckets[sig]
+                m, npd = len(entries), b.n_pad
+                slots = [e["job"].slot for e in entries]
+                gather = slots != list(range(len(b.jobs)))
+                dspan = (tracer.span("ps.dispatch", track="ps", jobs=m,
+                                     n_pad=npd, gather=gather)
+                         if tracer is not None else nullcontext())
+                with dspan:
+                    # one packed upload:
+                    # [times, mask, mu, std] + keys/steps/cen
+                    pack = np.zeros((4, m, npd), np.float32)
+                    pack[1] = 1.0   # pad columns read mask=True (write 0.0)
+                    keys = np.empty((m, 4), np.uint32)
+                    steps = np.empty((m,), np.uint32)
+                    cen = np.empty((m,), bool)
+                    for r, e in enumerate(entries):
+                        w = e["job"].width
+                        pack[0, r, :w] = e["times"]
+                        pack[1, r, :w] = e["mask"]
+                        if e["cen"]:
+                            pack[2, r, :w] = e["pred"][0][:w]
+                            pack[3, r, :w] = e["pred"][1][:w]
+                        steps[r] = e["istep"]
+                        cen[r] = e["cen"]
+                    keys[:, :2] = C._prng_key_rows(
+                        [e["job"].seed + e["dstep"] for e in entries])
+                    keys[:, 2:] = C._prng_key_rows(
+                        [e["job"].seed + 1_000_003 for e in entries])
+                    params, scales, widths, los = b.stacked()
+                    args = (jnp.asarray(pack), jnp.asarray(keys),
+                            jnp.asarray(steps), jnp.asarray(cen),
+                            scales, widths, los)
+                    if not gather:
+                        (b.rings, b.heads, cut, samp, mu, std, it) = (
+                            _full_observe_decide(
+                                params, b.rings, b.heads, *args,
+                                k_samples=b.k_samples))
+                    else:
+                        idx = jnp.asarray(slots, jnp.int32)
+                        (b.rings, b.heads, cut, samp, mu, std, it) = (
+                            _subset_observe_decide(
+                                params, b.rings, b.heads, idx, *args,
+                                k_samples=b.k_samples))
+                    issued += 1
+                    out = {"cutoff": cut, "samples": samp, "mu": mu,
+                           "std": std, "iter": it}
+                    for row, e in enumerate(entries):
+                        e["job"].pending = (e["dstep"], row, out)
+                        e["job"].queued = False
         self.dispatches += issued
         self.ticks += 1
         return issued
@@ -718,6 +740,18 @@ class PSServer:
         samples = np.asarray(
             job.pending_pred[2][job.pending_pred[3]])[:, :job.width]
         return order_stats.mc_order_stats(samples)
+
+    def predicted_samples(self, job_id: str):
+        """DEVICE view of the job's latest predictive sample cloud,
+        ``(K, n)`` with the bucket's pad columns sliced off — a lazy
+        array reference, never a host fetch, so the obs quality layer
+        can buffer it on the hot path and materialize it only at drain
+        boundaries.  None when no sampled decision is pending (cold,
+        fallback mode, or already consumed by a censored observe)."""
+        job = self.registry[job_id]
+        if job.pending_pred is None or job.pending_pred[2] is None:
+            return None
+        return job.pending_pred[2][job.pending_pred[3], :, :job.width]
 
     # -- elasticity ------------------------------------------------------
     def resize(self, job_id: str, n_workers: int, col_map=None,
@@ -825,12 +859,19 @@ class PSServer:
         rows = np.stack(job.trace)
         n = job.width
         seed = job.seed + job.resize_count + 1000 * job.refit_failures
+        if self.obs is not None:
+            self.obs.metrics.counter("ps.refits_started").inc()
         if self.refit_async:
             job.refit_task = C._spawn_refit(
                 lambda: self._fit_model(job, rows, n, seed),
                 job.resize_count)
         else:
-            self._install_refit(job, self._fit_model(job, rows, n, seed))
+            span = (self.obs.trace.span("ps.refit", track="ps",
+                                        job=job.job_id, width=n)
+                    if self.obs is not None else nullcontext())
+            with span:
+                model = self._fit_model(job, rows, n, seed)
+            self._install_refit(job, model)
 
     def _poll_refit(self, job: PSJob):
         if job.refit_task is None:
@@ -842,6 +883,8 @@ class PSServer:
         job.refit_task = None
         if err is not None:
             job.refit_failures += 1
+            if self.obs is not None:
+                self.obs.metrics.counter("ps.refit_failures").inc()
             if job.refit_failures > self.refit_retries:
                 raise C.RefitError(
                     f"job {job.job_id!r}: DMM refit failed "
@@ -863,6 +906,10 @@ class PSServer:
         job.mode = "dmm"
         job.fallback = None
         self._place(job, np.stack(job.trace[-job.cap:]))
+        if self.obs is not None:
+            # host counter increment — _poll_refit reaches here from the
+            # hot predict path, so no spans/fetches, just bookkeeping
+            self.obs.metrics.counter("ps.refits_installed").inc()
 
     def wait_refits(self, job_ids=None):
         """Block until every in-flight async refit for ``job_ids``
@@ -939,6 +986,9 @@ class JobHandle:
 
     def predicted_order_stats(self):
         return self.server.predicted_order_stats(self.job_id)
+
+    def predicted_samples(self):
+        return self.server.predicted_samples(self.job_id)
 
     def predicted_iter_time(self) -> Optional[float]:
         return self.server.predicted_iter_time(self.job_id)

@@ -1,0 +1,98 @@
+"""BENCH_obs.json schema guard.
+
+Runs ``benchmarks.obs_bench.bench_obs`` at quick size and asserts the
+machine-readable output keeps the ``bench_obs/v1`` contract.  The hard
+5% overhead gate lives in ``scripts/ci.sh --bench`` (min-of-repeats on
+a quiet runner); here the assertions are loose sanity so the suite
+stays robust to a noisy test machine.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+STEP_KEYS = ("n_workers", "steps", "repeats", "bare_us",
+             "instrumented_us", "overhead_frac")
+RING_KEYS = ("cap", "pushes", "push_us", "drain_us", "rows_drained",
+             "dropped")
+SPAN_KEYS = ("n_spans", "us_per_span", "spans_per_trainer_step",
+             "us_per_trainer_step")
+POLICY_KEYS = ("decisions", "scored", "mean_regret", "mean_idle_frac",
+               "mean_discard_frac", "mean_abs_residual", "coverage50",
+               "coverage90")
+
+
+@pytest.fixture(scope="module")
+def bench_json(tmp_path_factory):
+    from benchmarks.obs_bench import bench_obs
+
+    out = tmp_path_factory.mktemp("bench") / "BENCH_obs.json"
+    bench_obs(quick=True, out_path=str(out))
+    with open(out) as f:
+        return json.load(f)
+
+
+def _check_payload(data):
+    assert data["schema"] == "bench_obs/v1"
+    step = {r["n_workers"]: r for r in data["step"]}
+    assert set(step) == {8, 158}
+    for r in step.values():
+        for key in STEP_KEYS:
+            assert key in r, key
+        assert r["bare_us"] > 0 and r["instrumented_us"] > 0
+        # the CI gate pins 5% at n=158; here only "same ballpark", so a
+        # loaded test runner can't flake the suite
+        assert r["overhead_frac"] < 0.5, r
+
+    ring = data["ring"]
+    for key in RING_KEYS:
+        assert key in ring, key
+    assert ring["push_us"] > 0 and ring["drain_us"] > 0
+    # the bench overflows the ring on purpose: overflow is counted,
+    # never silent, and the drain returns exactly the kept cap
+    assert ring["pushes"] > ring["cap"]
+    assert ring["rows_drained"] == ring["cap"]
+    assert ring["dropped"] == ring["pushes"] - ring["cap"]
+
+    span = data["span"]
+    for key in SPAN_KEYS:
+        assert key in span, key
+    assert 0 < span["us_per_span"] < 1e4
+    assert span["us_per_trainer_step"] == (
+        span["spans_per_trainer_step"] * span["us_per_span"])
+
+    cal = data["calibration"]["policies"]
+    assert set(cal) == {"sync", "static", "firstk", "dmm"}
+    for name, r in cal.items():
+        for key in POLICY_KEYS:
+            assert key in r, (name, key)
+        assert r["decisions"] == data["calibration"]["steps"]
+        assert 0.0 <= r["mean_regret"] <= 1.0
+        assert 0.0 <= r["mean_idle_frac"] <= 1.0
+    # only the DMM draws predictive samples: it alone reports quantile
+    # coverage, and full sync by definition discards nothing
+    dmm = cal["dmm"]
+    assert dmm["scored"] == dmm["decisions"]
+    assert 0.0 <= dmm["coverage50"] <= 1.0
+    assert 0.0 <= dmm["coverage90"] <= 1.0
+    for name in ("sync", "static", "firstk"):
+        assert cal[name]["scored"] == 0
+        assert cal[name]["coverage50"] is None
+    assert cal["sync"]["mean_discard_frac"] == 0.0
+
+
+def test_bench_obs_schema(bench_json):
+    _check_payload(bench_json)
+    assert bench_json["quick"] is True
+
+
+def test_committed_bench_obs_matches_schema():
+    """The checked-in BENCH_obs.json must exist and satisfy the same
+    contract the CI gate re-derives from a fresh run."""
+    path = Path(__file__).resolve().parent.parent / "BENCH_obs.json"
+    assert path.exists(), "BENCH_obs.json not committed"
+    with open(path) as f:
+        _check_payload(json.load(f))

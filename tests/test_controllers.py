@@ -132,12 +132,16 @@ def test_dmm_beats_firstk_on_wall_clock_to_loss(fitted_model):
         return {"params": params, "opt": opt.init(params)}
 
     def run(ctl, steps=70):
+        from repro.obs import ObsRun
+
         data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
                                global_batch=N_WORKERS, seed=0)
         tr = Trainer(cfg=cfg, step_fn=step_fn, data=data, controller=ctl,
-                     timer=_sim(7), n_workers=N_WORKERS, metrics_every=0)
+                     timer=_sim(7), n_workers=N_WORKERS, metrics_every=0,
+                     obs=ObsRun())
         tr.restore_or_init(init_fn)
-        return tr.run(steps)
+        tr.run(steps)
+        return tr.obs.steps            # the one trajectory recorder
 
     ctl = CutoffController(rm, k_samples=64, seed=0)
     ctl.seed_window(trace)
@@ -149,17 +153,17 @@ def test_dmm_beats_firstk_on_wall_clock_to_loss(fitted_model):
     # longer.  (The converged tail is a knife-edge: per-step loss noise is
     # ~ the remaining decline there, so a tail-level crossing time measures
     # noise, not throughput.)
-    target = float(np.mean([h["loss"] for h in hist_fk[35:45]]))
+    target = float(np.mean([h["loss"] for h in hist_fk.records[35:45]]))
     clock_dmm = clock_to_loss(hist_dmm, target)
     clock_fk = clock_to_loss(hist_fk, target)
     assert clock_dmm is not None and clock_fk is not None
     assert clock_dmm < clock_fk, (clock_dmm, clock_fk)
     # and the speed does not come out of final model quality
-    final_dmm = float(np.mean([h["loss"] for h in hist_dmm[-3:]]))
-    final_fk = float(np.mean([h["loss"] for h in hist_fk[-3:]]))
+    final_dmm = hist_dmm.final_loss(window=3)
+    final_fk = hist_fk.final_loss(window=3)
     assert final_dmm <= final_fk + 0.02, (final_dmm, final_fk)
     # the cutoff controller also simply finishes the same steps sooner
-    assert hist_dmm[-1]["clock"] < hist_fk[-1]["clock"]
+    assert hist_dmm.total_clock() < hist_fk.total_clock()
 
 
 def test_observe_all_false_mask_is_rejected(fitted_model):

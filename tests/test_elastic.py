@@ -351,11 +351,15 @@ def tiny_train():
 
 def _trainer(cfg, step, init_fn, ctl, timer, n, *, batch=24, ckpt=None,
              ckpt_every=50, mask_agg="weights"):
+    from repro.obs import ObsRun
+
     data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=8,
                            global_batch=batch, seed=0)
+    # every trainer records to its own in-memory obs run; the churn
+    # acceptance test reads trajectories from the step streams
     tr = Trainer(cfg=cfg, step_fn=step, data=data, controller=ctl,
                  timer=timer, n_workers=n, mask_agg=mask_agg,
-                 ckpt_dir=ckpt, ckpt_every=ckpt_every)
+                 ckpt_dir=ckpt, ckpt_every=ckpt_every, obs=ObsRun())
     return tr.restore_or_init(init_fn)
 
 
@@ -425,9 +429,10 @@ def test_elastic_churn_beats_full_sync(tiny_train, fitted8):
     tr_sync = _trainer(cfg, step, init_fn, FullSyncController(8),
                        _churn_timer(9), 8)
     tr_sync.run(CHURN_STEPS)
-    target = float(np.mean([h["loss"] for h in tr_sync.history[-3:]]))
-    t_el = clock_to_loss(tr_el.history, target)
-    t_sync = clock_to_loss(tr_sync.history, target)
+    # both trajectories come off the obs step streams (the one recorder)
+    target = tr_sync.obs.steps.final_loss(window=3)
+    t_el = clock_to_loss(tr_el.obs.steps, target)
+    t_sync = clock_to_loss(tr_sync.obs.steps, target)
     assert t_el is not None
     assert t_sync is None or t_el < t_sync, (t_el, t_sync)
 

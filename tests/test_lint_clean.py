@@ -4,7 +4,7 @@ Two guards.  First: ``repro.analysis`` over the real ``src`` and
 ``tests`` trees finds NOTHING — every violation is either fixed or
 carries a reasoned suppression, and it stays that way.  Second: the
 committed ``ANALYSIS.json`` (the jaxpr audit pin, like the BENCH_*
-files) keeps its schema, covers the four hot entry points, and still
+files) keeps its schema, covers the five hot entry points, and still
 says transfer-free with donation effective.
 """
 from __future__ import annotations
@@ -19,6 +19,7 @@ EXPECTED_ENTRIES = {
     "batched_observe_decide_ragged",
     "train_step[mask_agg=weights]",
     "train_step[mask_agg=psum]",
+    "obs_ring_push",
 }
 
 
@@ -48,7 +49,7 @@ def test_analysis_json_committed_and_schema():
         assert set(d) == {"expected", "n_aliased_outputs", "effective"}
         assert d["effective"] is True
     for name in ("train_step[mask_agg=weights]",
-                 "train_step[mask_agg=psum]"):
+                 "train_step[mask_agg=psum]", "obs_ring_push"):
         assert entries[name]["donation"]["expected"] is True
         assert entries[name]["donation"]["n_aliased_outputs"] > 0
 

@@ -217,20 +217,24 @@ def test_dmm_beats_static_and_sync_wall_clock_to_loss(
         agg_cfg_and_steps, fitted_preset, mode):
     cfg, steps, init_fn = agg_cfg_and_steps
     preset, rm, trace = fitted_preset
+    from repro.obs import ObsRun
+
     dmm = CutoffController(rm, k_samples=32, seed=0)
     dmm.seed_window(trace)
-    hists = {}
+    streams = {}
     for name, ctl in [("dmm", dmm),
                       ("static", StaticCutoffController(8, cutoff=7)),
                       ("sync", FullSyncController(8))]:
         tr = _agg_trainer(cfg, steps, init_fn, mode, ctl,
                           _preset_sim(preset, 9))
-        hists[name] = tr.run(40)
+        tr.obs, tr.name = ObsRun(), name   # trajectory via the obs stream
+        tr.run(40)
+        streams[name] = tr.obs.steps
     # the loss every run must reach: full sync's (smoothed) final loss
-    target = float(np.mean([h["loss"] for h in hists["sync"][-3:]]))
-    t_dmm = clock_to_loss(hists["dmm"], target)
-    t_static = clock_to_loss(hists["static"], target)
-    t_sync = clock_to_loss(hists["sync"], target)
+    target = streams["sync"].final_loss(window=3)
+    t_dmm = clock_to_loss(streams["dmm"], target)
+    t_static = clock_to_loss(streams["static"], target)
+    t_sync = clock_to_loss(streams["sync"], target)
     assert t_dmm is not None
     assert t_static is None or t_dmm < t_static, (preset, mode, t_dmm,
                                                   t_static)
